@@ -1,0 +1,127 @@
+"""Regenerate the generated sections of EXPERIMENTS.md from results/dryrun."""
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+RESULTS = ROOT / "results" / "dryrun"
+EXP = ROOT / "EXPERIMENTS.md"
+
+
+def load(mesh=None):
+    out = []
+    for p in sorted(RESULTS.glob("*.json")):
+        r = json.loads(p.read_text())
+        r["_file"] = p.name
+        if mesh and r.get("mesh") != mesh and r.get("status") == "ok":
+            continue
+        out.append(r)
+    return out
+
+
+def dryrun_summary() -> str:
+    cells = load()
+    ok = [r for r in cells if r["status"] == "ok"]
+    skip = [r for r in cells if r["status"] == "skip"]
+    fail = [r for r in cells if r["status"] == "fail"]
+    sp = [r for r in ok if r["mesh"] == "16x16"]
+    mp = [r for r in ok if r["mesh"] == "2x16x16"]
+    lines = [
+        f"**Status**: {len(ok)} cell-lowerings compiled OK "
+        f"({len(sp)} on 16x16, {len(mp)} on 2x16x16 multi-pod), "
+        f"{len(skip)} skipped per assignment rules (long_500k on "
+        f"full-attention archs), {len(fail)} failed.",
+        "",
+        "Largest per-device footprints (peak = arguments + temporaries):",
+        "",
+        "| cell | mesh | peak GiB/dev | compile s |",
+        "|---|---|---|---|",
+    ]
+    for r in sorted(ok, key=lambda r: -r["memory_analysis"]
+                    ["bytes_per_device_peak_estimate"])[:8]:
+        m = r["memory_analysis"]["bytes_per_device_peak_estimate"] / 2**30
+        lines.append(f"| {r['arch']} x {r['shape']} | {r['mesh']} "
+                     f"| {m:.1f} | {r['compile_s']} |")
+    lines.append("")
+    lines.append("Collective mix across all OK cells (payload bytes): ")
+    agg = {}
+    for r in ok:
+        for k, v in r["collective_breakdown"].items():
+            agg[k] = agg.get(k, 0) + v
+    tot = sum(agg.values()) or 1
+    lines.append(", ".join(f"{k} {100*v/tot:.0f}%" for k, v in
+                           sorted(agg.items(), key=lambda kv: -kv[1])))
+    return "\n".join(lines)
+
+
+def roofline_table(mesh="16x16") -> str:
+    rows = ["| arch | shape | compute s | memory s | collective s | "
+            "dominant | MODEL_FLOPS | useful | frac | MFU | peak GiB |",
+            "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in load():
+        if r.get("mesh") != mesh:
+            if r.get("status") == "skip" and r["_file"].endswith("sp.json"):
+                arch, shape, _ = r["_file"].split("__")
+                rows.append(f"| {arch} | {shape} | SKIP (sub-quadratic-"
+                            f"attention rule) | | | | | | | | |")
+            continue
+        if r["status"] != "ok":
+            continue
+        m = r["memory_analysis"]["bytes_per_device_peak_estimate"] / 2**30
+        chips = r["chips"]
+        mfu = (r["model_flops"] / (chips * 197e12)) / r["step_time_lb_s"]
+        note = "*" if r.get("accounting") else ""
+        rows.append(
+            f"| {r['arch']}{note} | {r['shape']} | {r['compute_s']:.2e} "
+            f"| {r['memory_s']:.2e} | {r['collective_s']:.2e} "
+            f"| {r['dominant'].replace('_s', '')} | {r['model_flops']:.2e} "
+            f"| {r['useful_flops_ratio']:.2f} | {r['roofline_fraction']:.3f} "
+            f"| {mfu:.4f} | {m:.1f} |")
+    rows.append("")
+    rows.append("`*` = analytic-FLOPs accounting (SSD probe fallback, "
+                "DESIGN.md §10); all other cells use probe extrapolation "
+                "(residual < 1e-12).")
+    return "\n".join(rows)
+
+
+def analysis() -> str:
+    cells = [r for r in load(mesh="16x16") if r["status"] == "ok"]
+    by_dom = {}
+    for r in cells:
+        by_dom.setdefault(r["dominant"], []).append(r)
+    lines = []
+    for dom, rs in sorted(by_dom.items(), key=lambda kv: -len(kv[1])):
+        names = ", ".join(f"{r['arch']}x{r['shape']}" for r in rs[:6])
+        more = f" (+{len(rs)-6} more)" if len(rs) > 6 else ""
+        lines.append(f"* **{dom.replace('_s','')}-bound** ({len(rs)} cells):"
+                     f" {names}{more}")
+    lines.append("")
+    lines.append(
+        "Per-cell one-line reading: train cells are memory-bound "
+        "(fusion-naive byte metric; real lever = flash kernel + remat "
+        "policy, see §Perf cell 2); decode cells are collective-bound at "
+        "baseline (KV-cache resharding — fixed 160x+ by flash-decode, "
+        "§Perf cell 1) and memory-bound after; MoE cells are "
+        "collective-bound (EP all-reduces + expert gather traffic — the "
+        "natural next hillclimb target beyond the three assigned); "
+        "SSM/hybrid decode cells are memory-bound on state r/w (intrinsic "
+        "to S-independent decode).")
+    return "\n".join(lines)
+
+
+def main():
+    text = EXP.read_text()
+    text = re.sub(r"<!-- DRYRUN_SUMMARY -->",
+                  lambda m: dryrun_summary(), text)
+    text = re.sub(r"<!-- ROOFLINE_TABLE -->",
+                  lambda m: roofline_table(), text)
+    text = re.sub(r"<!-- ROOFLINE_ANALYSIS -->",
+                  lambda m: analysis(), text)
+    EXP.write_text(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

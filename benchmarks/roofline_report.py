@@ -1,0 +1,63 @@
+"""Roofline report: reads results/dryrun/*.json into the EXPERIMENTS.md
+tables (and a CSV summary for benchmarks/run.py)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load_cells(mesh: str | None = None, quant: str = "bf16") -> list[dict]:
+    cells = []
+    for p in sorted(RESULTS.glob("*.json")):
+        rec = json.loads(p.read_text())
+        rec["_file"] = p.name
+        if rec.get("quant", "bf16") != quant and rec.get("status") == "ok":
+            continue
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        cells.append(rec)
+    return cells
+
+
+def summary_csv():
+    for rec in load_cells(mesh="16x16"):
+        if rec.get("status") != "ok":
+            continue
+        name = f"roofline_{rec['arch']}_{rec['shape']}"
+        print(f"{name},0,dominant={rec['dominant']};"
+              f"fraction={rec['roofline_fraction']:.4f};"
+              f"compute_s={rec['compute_s']:.3e};"
+              f"memory_s={rec['memory_s']:.3e};"
+              f"collective_s={rec['collective_s']:.3e}")
+
+
+def markdown_table(mesh: str = "16x16") -> str:
+    """Full roofline table for EXPERIMENTS.md."""
+    rows = ["| arch | shape | compute s | memory s | collective s | "
+            "dominant | MODEL_FLOPS | useful ratio | roofline frac | "
+            "peak GiB/dev |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    skips = []
+    for rec in load_cells(mesh=None):
+        if rec.get("status") == "skip":
+            continue
+        if rec.get("mesh") != mesh:
+            continue
+        if rec.get("status") != "ok":
+            rows.append(f"| {rec.get('arch','?')} | {rec.get('shape','?')} |"
+                        f" FAIL | | | | | | | |")
+            continue
+        m = rec["memory_analysis"]["bytes_per_device_peak_estimate"] / 2**30
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['compute_s']:.2e} "
+            f"| {rec['memory_s']:.2e} | {rec['collective_s']:.2e} "
+            f"| {rec['dominant'].replace('_s','')} | {rec['model_flops']:.2e} "
+            f"| {rec['useful_flops_ratio']:.2f} "
+            f"| {rec['roofline_fraction']:.3f} | {m:.1f} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

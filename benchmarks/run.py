@@ -1,0 +1,42 @@
+"""Benchmark orchestrator: one function per paper table/figure + kernel and
+roofline benches.  Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+
+    from benchmarks import paper_tables
+    for fn in paper_tables.ALL:
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{fn.__name__},FAIL,{traceback.format_exc(limit=1)!r}")
+
+    from benchmarks import kernel_bench
+    for fn in kernel_bench.ALL:
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{fn.__name__},FAIL,{traceback.format_exc(limit=1)!r}")
+
+    # roofline summary from the dry-run artifacts (if the sweep has run)
+    try:
+        from benchmarks import roofline_report
+        roofline_report.summary_csv()
+    except Exception:  # noqa: BLE001
+        print("roofline_report,SKIP,run `python -m repro.launch.dryrun --all`"
+              " first")
+
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""repro: LUNA-CIM (LUT-based programmable neural processing) as a JAX/TPU framework.
+
+Layers (bottom-up):
+  core      — the paper's contribution: D&C LUT multiplication, quantization,
+              hardware cost model, LunaDense layers.
+  kernels   — Pallas TPU kernels for the perf-critical paths.
+  models    — the 10 assigned architectures + the paper's own eval net.
+  parallel  — sharding rules, compressed collectives, pipeline parallelism.
+  data/optim/checkpoint/train/serve — training & serving substrates.
+  configs   — per-architecture configs and input shapes.
+  launch    — mesh construction, multi-pod dry-run, roofline, CLIs.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,12 @@
+"""The paper's primary contribution: LUNA-CIM LUT-based D&C multiplication,
+quantization substrate, hardware cost model, and the LunaDense layer."""
+from repro.core.luna import (LunaMode, luna_matmul, luna_product,
+                             combine_partials, split_digits)
+from repro.core.layers import QuantConfig, quant_matmul
+from repro.core.quant import QParams, calibrate, dequantize, quantize
+
+__all__ = [
+    "LunaMode", "luna_matmul", "luna_product", "combine_partials",
+    "split_digits", "QuantConfig", "quant_matmul", "QParams", "calibrate",
+    "dequantize", "quantize",
+]

@@ -1,0 +1,207 @@
+"""LUNA-CIM hardware cost model — reproduces the paper's Tables I/II and the
+energy/area analyses (Figs 15/16/18).
+
+Nothing here runs on TPU; it is the *paper-faithful* accounting of the SRAM
+cells, 2:1 muxes and half/full adders each multiplier variant needs, plus a
+TSMC-65nm-calibrated transistor/area/energy model.  All of the paper's stated
+numbers are asserted in ``tests/test_cost_model.py``:
+
+  Table I   — conventional LUT: 48/128/320/768/1792/4096 SRAMs for 3b..8b.
+  Table II  — optimized D&C: (10, 36, 3, 3) @4b, (36, 120, 11, 21) @8b,
+              (136, 432, 31, 105) @16b.
+  Fig 15    — multiplier energy = 47.96 fJ = 0.0276 % of the 173.8 pJ/bit
+              SRAM write energy.
+  Fig 16    — optimized D&C ~3.7x smaller area than conventional LUT @4b.
+  Fig 18    — 4 LUNA units on an 8x8 array = 32 % area overhead
+              (4 x 287 um^2 of 3650 um^2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.luna import LunaMode
+
+# --- TSMC 65 nm calibration constants (documented model choices) -----------
+TRANSISTORS = {
+    "sram": 6,    # 6T SRAM cell
+    "mux": 4,     # 2:1 pass-transistor mux
+    "ha": 14,     # standard-cell half adder
+    "fa": 28,     # standard-cell full adder
+}
+# Paper-measured constants (Section IV.B/IV.C):
+E_SRAM_WRITE_PER_BIT_J = 173.8e-12   # J / bit / access, 8x8 array
+E_MUX_MULTIPLIER_J = 47.96e-15       # J, 4b mux-based multiplier
+LUNA_UNIT_AREA_UM2 = 287.0
+ARRAY_WITH_4_UNITS_AREA_UM2 = 3650.0
+
+
+@dataclass(frozen=True)
+class HwCost:
+    srams: int
+    muxes: int   # 1-bit 2:1 muxes
+    has: int
+    fas: int
+
+    @property
+    def transistors(self) -> int:
+        return (self.srams * TRANSISTORS["sram"] + self.muxes * TRANSISTORS["mux"]
+                + self.has * TRANSISTORS["ha"] + self.fas * TRANSISTORS["fa"])
+
+    def __add__(self, o: "HwCost") -> "HwCost":
+        return HwCost(self.srams + o.srams, self.muxes + o.muxes,
+                      self.has + o.has, self.fas + o.fas)
+
+
+# ---------------------------------------------------------------------------
+# Adder-tree construction (paper Figs 2/3 combine step, generalized).
+#
+# Combining partial sum A (width wa, at bit 0) with B (width wb, offset s):
+#   * bit s                 : HA (A_s + B_0)
+#   * bits s+1 .. wa-1      : FA (A, B, carry)          -> wa-1-s of them
+#   * bits wa .. s+wb-1     : HA (B + carry ripple)     -> s+wb-wa of them
+# The paper drops provably-zero-carry top HAs (its "101101" argument); the
+# generic tree reproduces Table II exactly for 4/8/16 b as-is.
+# ---------------------------------------------------------------------------
+
+def _combine(wa: int, wb: int, s: int) -> tuple[int, int, int]:
+    ha = 1 + (s + wb - wa)
+    fa = wa - 1 - s
+    return ha, fa, s + wb
+
+
+def adder_tree_counts(num_digits: int, pp_width: int, digit_bits: int = 2
+                      ) -> tuple[int, int]:
+    """(HA, FA) to sum ``num_digits`` partial products of ``pp_width`` bits
+    at stride ``digit_bits``, combined pairwise (binary tree)."""
+    def rec(n: int) -> tuple[int, int, int]:
+        if n == 1:
+            return 0, 0, pp_width
+        lo = n // 2
+        ha_l, fa_l, w_l = rec(lo)
+        ha_h, fa_h, w_h = rec(n - lo)
+        ha, fa, w = _combine(w_l, w_h, digit_bits * lo)
+        return ha_l + ha_h + ha, fa_l + fa_h + fa, w
+    ha, fa, _ = rec(num_digits)
+    return ha, fa
+
+
+# ---------------------------------------------------------------------------
+# Per-variant component counts
+# ---------------------------------------------------------------------------
+
+def conventional_cost(bits: int) -> HwCost:
+    """Paper Fig 1 / Table I: full 2**bits-entry LUT of 2*bits-wide products."""
+    n_entries, out_bits = 1 << bits, 2 * bits
+    return HwCost(srams=n_entries * out_bits,
+                  muxes=(n_entries - 1) * out_bits, has=0, fas=0)
+
+
+def dc_cost(bits: int, digit_bits: int = 2) -> HwCost:
+    """Paper Fig 2: D&C with one shared (fanout) 4-entry full table."""
+    d = bits // digit_bits
+    pp_w = bits + digit_bits
+    srams = (1 << digit_bits) * pp_w          # 4 entries x (bits+2) bits
+    muxes = d * ((1 << digit_bits) - 1) * pp_w
+    ha, fa = adder_tree_counts(d, pp_w, digit_bits)
+    return HwCost(srams, muxes, ha, fa)
+
+
+def opt_dc_cost(bits: int, digit_bits: int = 2) -> HwCost:
+    """Paper Fig 3 / Table II: optimized table = {0-bit, W, wired 2W, MSBs of
+    3W}; one table set shared per *pair* of digit muxes (the paper's 4b slice
+    structure)."""
+    d = bits // digit_bits
+    pp_w = bits + digit_bits
+    pairs = (d + 1) // 2
+    srams_per_set = 1 + bits + (bits + 1)     # 0, W, 3W-MSBs
+    muxes = d * ((1 << digit_bits) - 1) * pp_w
+    ha, fa = adder_tree_counts(d, pp_w, digit_bits)
+    return HwCost(pairs * srams_per_set, muxes, ha, fa)
+
+
+def approx_dc_cost(bits: int = 4, digit_bits: int = 2) -> HwCost:
+    """Paper Fig 9: Z_LSB := 0 — the low digit's LUT, mux and all adders
+    vanish (for 4b; for wider operands only the low digit is dropped)."""
+    d = bits // digit_bits - 1
+    pp_w = bits + digit_bits
+    pairs = (d + 1) // 2
+    muxes = d * ((1 << digit_bits) - 1) * pp_w
+    ha, fa = adder_tree_counts(d, pp_w, digit_bits) if d > 1 else (0, 0)
+    return HwCost(pairs * (1 + bits + bits + 1), muxes, ha, fa)
+
+
+def approx_dc2_cost(bits: int = 4) -> HwCost:
+    """Paper Fig 10 (4b): Z_LSB := W.  Counts stated in the paper: 12 SRAMs,
+    18 muxes, 4 HA, 1 FA (top HA removed by the max-Z_MSB=101101 argument)."""
+    if bits != 4:
+        raise NotImplementedError("paper defines ApproxD&C2 for 4b")
+    return HwCost(srams=12, muxes=18, has=4, fas=1)
+
+
+def variant_cost(mode: LunaMode | str, bits: int = 4) -> HwCost:
+    mode = LunaMode(mode)
+    return {
+        LunaMode.CONVENTIONAL: lambda: conventional_cost(bits),
+        LunaMode.DC: lambda: dc_cost(bits),
+        LunaMode.OPT_DC: lambda: opt_dc_cost(bits),
+        LunaMode.APPROX_DC: lambda: approx_dc_cost(bits),
+        LunaMode.APPROX_DC2: lambda: approx_dc2_cost(bits),
+    }[mode]()
+
+
+# ---------------------------------------------------------------------------
+# Energy / area reports (Figs 15/16/18)
+# ---------------------------------------------------------------------------
+
+def energy_report() -> dict:
+    """Fig 15 energy decomposition of the 8x8 array + multiplier.
+
+    The two paper-measured anchors are the SRAM write energy/bit and the
+    multiplier energy; the remaining component split is a documented model
+    (bitline conditioning dominates SRAM write energy at 65 nm).
+    """
+    e_bit = E_SRAM_WRITE_PER_BIT_J
+    share = E_MUX_MULTIPLIER_J / e_bit
+    return {
+        "sram_write_per_bit_J": e_bit,
+        "mux_multiplier_J": E_MUX_MULTIPLIER_J,
+        "multiplier_share": share,          # 0.000276 -> 0.0276 %
+        "components_J": {                    # modeled split of e_bit
+            "bitline_conditioning": 0.60 * e_bit,
+            "sense_amplifiers": 0.15 * e_bit,
+            "wordline_row_decoder": 0.06 * e_bit,
+            "column_decoder_ctrl": 0.04 * e_bit,
+            "cell_array": 0.15 * e_bit,
+            "mux_multiplier": E_MUX_MULTIPLIER_J,
+        },
+    }
+
+
+def area_report(bits: int = 4) -> dict:
+    """Fig 16: transistor-count area comparison across variants."""
+    out = {}
+    for mode in LunaMode:
+        c = variant_cost(mode, bits)
+        out[mode.value] = {
+            "srams": c.srams, "muxes": c.muxes, "has": c.has, "fas": c.fas,
+            "transistors": c.transistors,
+        }
+    conv = out["conventional"]["transistors"]
+    for mode in LunaMode:
+        out[mode.value]["area_vs_conventional"] = conv / out[mode.value]["transistors"]
+    return out
+
+
+def array_overhead(num_units: int = 4) -> dict:
+    """Fig 18: LUNA units added to the 8x8 SRAM array."""
+    unit = LUNA_UNIT_AREA_UM2
+    total = ARRAY_WITH_4_UNITS_AREA_UM2
+    # Paper total is measured with 4 units; scale linearly in the model.
+    sram_only = total - 4 * unit
+    total_n = sram_only + num_units * unit
+    return {
+        "unit_area_um2": unit,
+        "array_area_um2": sram_only,
+        "total_area_um2": total_n,
+        "overhead_fraction": num_units * unit / total_n,
+    }

@@ -1,0 +1,232 @@
+"""LUNA-CIM core arithmetic: divide-and-conquer LUT multiplication.
+
+The paper decomposes an ``n``-bit multiplication ``W x Y`` (weight-stationary)
+into radix-4 digits of the *input* ``Y``::
+
+    W * Y = sum_d (W * y_d) << (2*d),        y_d in {0,1,2,3}
+
+Each partial product ``W * y_d`` is a lookup into the 4-entry table
+``{0, W, W<<1, 3W}`` (paper Figs 2/3).  The approximation variants replace the
+lowest digit's partial product:
+
+    ApproxD&C  (paper Figs 4-9):  Z_LSB := 0   (Hamming-optimal constant)
+    ApproxD&C2 (paper Figs 10-12): Z_LSB := W  (pretend y_lo == 01)
+
+TPU adaptation (see DESIGN.md section 2): the digit split becomes *digit-plane
+int8 matmuls* on the MXU; ApproxD&C drops the low plane (halves MXU work);
+ApproxD&C2's contribution is ``colsum(W)`` — a precomputed bias.
+
+Everything in this module is bit-exact integer arithmetic on *unsigned code*
+tensors (int32 carriers).  Real-valued layers live in ``core.layers``; the
+Pallas kernels in ``repro.kernels.luna_mm`` implement the same semantics with
+VMEM tiling and are validated against this module.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DIGIT_BITS = 2  # the paper's radix-4 split
+RADIX = 1 << DIGIT_BITS
+
+
+class LunaMode(str, enum.Enum):
+    """Multiplier variants, one per paper figure."""
+
+    CONVENTIONAL = "conventional"  # Fig 1: full 2^n-entry LUT (exact)
+    DC = "dc"                      # Fig 2: divide & conquer (exact)
+    OPT_DC = "opt_dc"              # Fig 3: optimized storage D&C (exact)
+    APPROX_DC = "approx_dc"        # Figs 4/9: Z_LSB := 0
+    APPROX_DC2 = "approx_dc2"      # Fig 10: Z_LSB := W
+
+    @property
+    def is_exact(self) -> bool:
+        return self in (LunaMode.CONVENTIONAL, LunaMode.DC, LunaMode.OPT_DC)
+
+
+def num_digits(bits: int, digit_bits: int = DIGIT_BITS) -> int:
+    if bits % digit_bits:
+        raise ValueError(f"bits={bits} not divisible by digit_bits={digit_bits}")
+    return bits // digit_bits
+
+
+def split_digits(codes: jax.Array, bits: int, digit_bits: int = DIGIT_BITS) -> list[jax.Array]:
+    """Split unsigned codes into radix-``2**digit_bits`` digits, LSB first."""
+    mask = (1 << digit_bits) - 1
+    return [(codes >> (digit_bits * d)) & mask for d in range(num_digits(bits, digit_bits))]
+
+
+def combine_partials(partials: Sequence[jax.Array], digit_bits: int = DIGIT_BITS) -> jax.Array:
+    """Shift-add combine of per-digit partial products (LSB first).
+
+    This is the paper's HA/FA adder tree; on TPU it is int32 adds.
+    """
+    out = partials[0]
+    for d, pp in enumerate(partials[1:], start=1):
+        out = out + (pp << (digit_bits * d))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Element-wise multiplier semantics (the paper's single LUNA unit)
+# ---------------------------------------------------------------------------
+
+def luna_product(w: jax.Array, y: jax.Array, bits: int = 4,
+                 mode: LunaMode = LunaMode.OPT_DC,
+                 digit_bits: int = DIGIT_BITS) -> jax.Array:
+    """Element-wise ``W*Y`` with the selected LUNA multiplier variant.
+
+    ``w``/``y`` are unsigned integer codes in ``[0, 2**bits)``.  Exact modes
+    return the true product; approx modes return the paper's approximation.
+    """
+    mode = LunaMode(mode)
+    w = w.astype(jnp.int32)
+    y = y.astype(jnp.int32)
+    digits = split_digits(y, bits, digit_bits)
+    partials = [w * d for d in digits]
+    if mode == LunaMode.APPROX_DC:
+        partials[0] = jnp.zeros_like(partials[0])
+    elif mode == LunaMode.APPROX_DC2:
+        partials[0] = w
+    return combine_partials(partials, digit_bits)
+
+
+# ---------------------------------------------------------------------------
+# Matmul semantics (a LUNA array: one unit per (k, n) weight)
+# ---------------------------------------------------------------------------
+
+def _plane_matmul(y_plane: jax.Array, w: jax.Array, bits: int) -> jax.Array:
+    """Digit-plane matmul (the MXU-mapped lookup): int8 x int8 -> int32.
+
+    The digit plane is always in {0..3}; the weight codes fit int8 for
+    bits <= 7 (the MXU int8 path).  Wider weights keep an int32 carrier —
+    the paper's LUT stores full-width entries, only Y is digit-split.
+    """
+    wt = jnp.int8 if bits <= 7 else jnp.int32
+    return jax.lax.dot_general(
+        y_plane.astype(wt), w.astype(wt),
+        dimension_numbers=(((y_plane.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+def luna_matmul(y_codes: jax.Array, w_codes: jax.Array, bits: int = 4,
+                mode: LunaMode = LunaMode.OPT_DC,
+                digit_bits: int = DIGIT_BITS) -> jax.Array:
+    """``Z[m, n] = sum_k luna_product(W[k, n], Y[m, k])`` in int32.
+
+    The digit decomposition commutes with the contraction: each digit plane of
+    Y contracts against W in a separate low-precision matmul and the shift-add
+    happens once on the int32 accumulators.  For the approx modes the low
+    plane is dropped (APPROX_DC) or replaced by ``colsum(W)`` broadcast over
+    rows (APPROX_DC2) — zero runtime cost on TPU.
+    """
+    mode = LunaMode(mode)
+    planes = split_digits(y_codes.astype(jnp.int32), bits, digit_bits)
+    acc = jnp.zeros(y_codes.shape[:-1] + (w_codes.shape[-1],), jnp.int32)
+    for d in range(len(planes)):
+        if d == 0:
+            if mode == LunaMode.APPROX_DC:
+                continue
+            if mode == LunaMode.APPROX_DC2:
+                colsum = jnp.sum(w_codes.astype(jnp.int32), axis=0)
+                acc = acc + colsum  # broadcast over leading dims
+                continue
+        acc = acc + (_plane_matmul(planes[d], w_codes, bits) << (digit_bits * d))
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Optimized-storage table reconstruction (paper Fig 3) — used by tests and
+# the cost model to prove the 10-SRAM-cell claim is information-complete.
+# ---------------------------------------------------------------------------
+
+def optimized_table_storage(w: int, bits: int = 4) -> dict:
+    """Return the *stored bits* of the optimized D&C table for weight ``w``.
+
+    Paper Fig 3: of the 4-entry table {0, W, 2W, 3W} only ``1 + bits +
+    (bits+1)`` bits are stored: one literal 0, the ``bits`` bits of W, and the
+    ``bits+1`` MSBs of 3W (the LSB of 3W equals the LSB of W).
+    """
+    assert 0 <= w < (1 << bits)
+    t3 = 3 * w
+    return {
+        "zero_bit": 0,
+        "w_bits": w,                      # `bits` cells
+        "t3_msbs": t3 >> 1,               # `bits + 1` cells
+        "num_cells": 1 + bits + (bits + 1),
+    }
+
+
+def optimized_table_reconstruct(storage: dict, bits: int = 4) -> list[int]:
+    """Rebuild the full 4-entry table from the stored bits (Fig 3 wiring)."""
+    w = storage["w_bits"]
+    t3 = (storage["t3_msbs"] << 1) | (w & 1)  # LSB of 3W == LSB of W
+    return [0, w, w << 1, t3]
+
+
+# ---------------------------------------------------------------------------
+# Statistical analyses (paper Figs 5, 6, 7/8, 11/12)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def lsb_product_distribution(bits: int = 4, digit_bits: int = DIGIT_BITS):
+    """Fig 5: distribution of the LSB-side product ``W * y_lo``.
+
+    W uniform over [0, 2**bits), y_lo uniform over [0, 2**digit_bits).
+    Returns (values 0..max, probabilities).  P(0) = 0.296 for 4b.
+    """
+    ws = np.arange(1 << bits)
+    ys = np.arange(1 << digit_bits)
+    prods = (ws[:, None] * ys[None, :]).ravel()
+    max_val = ((1 << bits) - 1) * ((1 << digit_bits) - 1)
+    n_out_bits = bits + digit_bits
+    counts = np.bincount(prods, minlength=1 << n_out_bits)
+    return np.arange(1 << n_out_bits), counts / counts.sum(), max_val
+
+
+def impossible_lsb_products(bits: int = 4, digit_bits: int = DIGIT_BITS) -> list[int]:
+    """Values in [0, 2**(bits+digit_bits)) that ``W*y_lo`` can never produce."""
+    vals, probs, _ = lsb_product_distribution(bits, digit_bits)
+    return [int(v) for v, p in zip(vals, probs) if p == 0.0]
+
+
+def hamming_distance_profile(bits: int = 4, digit_bits: int = DIGIT_BITS):
+    """Fig 6: mean per-bit Hamming distance of each candidate constant vs the
+    true LSB product, weighted by the product distribution.
+
+    The paper reports the *fraction of differing bits* (6-bit strings):
+    argmin is 0 with mean HD 0.275 for 4b (= 1.656 differing bits / 6).
+    """
+    vals, probs, _ = lsb_product_distribution(bits, digit_bits)
+    n_out_bits = bits + digit_bits
+    cands = np.arange(1 << n_out_bits)
+    xor = cands[:, None] ^ vals[None, :]
+    hd = np.zeros_like(xor, dtype=np.float64)
+    for b in range(n_out_bits):
+        hd += (xor >> b) & 1
+    return cands, (hd * probs[None, :]).sum(axis=1) / n_out_bits
+
+
+def error_table(mode: LunaMode, bits: int = 4) -> np.ndarray:
+    """Figs 7/11: error surface ``exact - approx`` over all (W, Y) codes.
+
+    Paper convention (Figs 8/12 histograms): ApproxD&C error in [0, 45],
+    ApproxD&C2 error in [-15, 30] for 4b.
+    """
+    n = 1 << bits
+    w = jnp.arange(n, dtype=jnp.int32)[:, None]
+    y = jnp.arange(n, dtype=jnp.int32)[None, :]
+    exact = w * y
+    approx = luna_product(jnp.broadcast_to(w, (n, n)),
+                          jnp.broadcast_to(y, (n, n)), bits, mode)
+    return np.asarray(exact - approx)
+
+
+def mean_abs_error(mode: LunaMode, bits: int = 4) -> float:
+    """Expected |error| under uniform codes — the analytic core of Fig 13."""
+    return float(np.abs(error_table(LunaMode(mode), bits)).mean())

@@ -1,0 +1,69 @@
+"""Lookup-table machinery: product tables, codebooks, and mux-tree selection.
+
+The paper's select logic is a binary tree of 2:1 muxes (15 of them for a
+16-entry table).  The TPU-native analogue is a binary tree of ``jnp.where``
+selects on the index bits — ``2**b - 1`` selects for a ``2**b``-entry table,
+exactly the paper's mux count.  This is what makes the LUT *programmable*:
+the same tree evaluates any codebook (uniform int4, NF4, arbitrary 16-value
+tables), which is the beyond-paper generalization used by ``kernels.lut_gemm``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# The NF4 codebook (QLoRA, Dettmers et al. 2023) — a non-linear 16-entry LUT
+# that the paper's mux-tree evaluates at identical hardware cost to uniform
+# int4.  Demonstrates LUNA "programmability" beyond uniform quantization.
+NF4_CODEBOOK = np.array([
+    -1.0, -0.6961928009986877, -0.5250730514526367, -0.39491748809814453,
+    -0.28444138169288635, -0.18477343022823334, -0.09105003625154495, 0.0,
+    0.07958029955625534, 0.16093020141124725, 0.24611230194568634,
+    0.33791524171829224, 0.44070982933044434, 0.5626170039176941,
+    0.7229568362236023, 1.0,
+], dtype=np.float32)
+
+
+def product_table(w_codes: jax.Array, bits: int = 4) -> jax.Array:
+    """Conventional-LUT product table (paper Fig 1): entry ``j = j * W``.
+
+    Returns shape ``(2**bits, *w_codes.shape)`` int32.
+    """
+    idx = jnp.arange(1 << bits, dtype=jnp.int32)
+    return idx.reshape((-1,) + (1,) * w_codes.ndim) * w_codes.astype(jnp.int32)[None]
+
+
+def dc_table(w_codes: jax.Array, digit_bits: int = 2) -> jax.Array:
+    """D&C sub-multiplier table {0, W, 2W, 3W} (paper Figs 2/3)."""
+    return product_table(w_codes, digit_bits)
+
+
+def mux_tree_select(table: jax.Array, idx: jax.Array) -> jax.Array:
+    """Select ``table[idx]`` with a binary tree of 2:1 selects on idx bits.
+
+    ``table``: ``(2**b, *S)`` where ``S`` broadcasts against ``idx.shape``.
+    Uses ``2**b - 1`` vector selects — the paper's mux-tree, vectorized.
+    Works under Pallas (no gather required).
+    """
+    n = table.shape[0]
+    b = n.bit_length() - 1
+    assert n == 1 << b, f"table size {n} not a power of two"
+    level = table
+    for bit in range(b):
+        sel = ((idx >> bit) & 1).astype(bool)
+        lo, hi = level[0::2], level[1::2]
+        # broadcast sel against entry shape
+        sel_b = jnp.broadcast_to(sel, jnp.broadcast_shapes(sel.shape, lo.shape[1:]))
+        level = jnp.where(sel_b[None], hi, lo)
+    return level[0]
+
+
+def mux_count(table_size: int, out_bits: int) -> int:
+    """Paper's 1-bit 2:1 mux count for a ``table_size``:1 mux of ``out_bits``."""
+    return (table_size - 1) * out_bits
+
+
+def codebook_dequant(codes: jax.Array, codebook: jax.Array) -> jax.Array:
+    """Dequantize integer codes through an arbitrary codebook via mux tree."""
+    return mux_tree_select(codebook.reshape(-1, *([1] * codes.ndim)), codes)

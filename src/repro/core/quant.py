@@ -1,0 +1,126 @@
+"""Quantization substrate: affine quantizers, calibration, and the real-valued
+LUNA matmul (integer core + zero-point corrections + STE for QAT).
+
+The paper's operands are unsigned 4-bit codes.  Real tensors are mapped to
+unsigned codes with asymmetric affine quantization::
+
+    x ~= s_x * (q_x - z_x),   q_x in [0, 2**bits)
+
+and the matmul identity (standard integer-GEMM algebra) recovers the real
+product from the code-space LUNA accumulation::
+
+    x @ w ~= s_x s_w [ L(q_x, q_w) - z_x colsum(q_w) - rowsum(q_x) z_w
+                       + K z_x z_w ]
+
+where ``L`` is ``luna_matmul`` in any mode.  For approx modes the paper's
+code-space error flows through the same identity scaled by ``s_x s_w`` —
+which is exactly how the paper's Fig 13 NN-level MAE arises.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.luna import LunaMode, luna_matmul
+
+
+class QParams(NamedTuple):
+    scale: jax.Array       # per-tensor () or per-channel (N,)
+    zero_point: jax.Array  # same shape as scale, unsigned-code zero point
+    bits: int
+
+
+def calibrate(x: jax.Array, bits: int = 4, axis: int | None = None,
+              symmetric: bool = False) -> QParams:
+    """Min/max affine calibration to unsigned codes.
+
+    ``axis``: reduction keeps this axis (per-channel); None = per-tensor.
+    ``symmetric``: centers the range on 0 (zero_point at mid-code).
+    """
+    qmax = (1 << bits) - 1
+    if axis is None:
+        lo = jnp.min(x)
+        hi = jnp.max(x)
+    else:
+        red = tuple(i for i in range(x.ndim) if i != axis % x.ndim)
+        lo = jnp.min(x, axis=red)
+        hi = jnp.max(x, axis=red)
+    if symmetric:
+        amax = jnp.maximum(jnp.abs(lo), jnp.abs(hi))
+        lo, hi = -amax, amax
+    scale = jnp.maximum(hi - lo, 1e-8) / qmax
+    zp = jnp.clip(jnp.round(-lo / scale), 0, qmax)
+    return QParams(scale.astype(jnp.float32), zp.astype(jnp.float32), bits)
+
+
+def quantize(x: jax.Array, qp: QParams) -> jax.Array:
+    """Real -> unsigned integer codes (int32 carrier)."""
+    qmax = (1 << qp.bits) - 1
+    codes = jnp.round(x / qp.scale + qp.zero_point)
+    return jnp.clip(codes, 0, qmax).astype(jnp.int32)
+
+
+def dequantize(codes: jax.Array, qp: QParams) -> jax.Array:
+    return (codes.astype(jnp.float32) - qp.zero_point) * qp.scale
+
+
+def quant_error(x: jax.Array, qp: QParams) -> jax.Array:
+    return dequantize(quantize(x, qp), qp) - x
+
+
+# ---------------------------------------------------------------------------
+# Real-valued LUNA matmul
+# ---------------------------------------------------------------------------
+
+def luna_matmul_f32(x: jax.Array, w: jax.Array, mode: LunaMode | str,
+                    bits: int = 4, x_qp: QParams | None = None,
+                    w_qp: QParams | None = None) -> jax.Array:
+    """Float-in/float-out matmul with LUNA integer arithmetic inside.
+
+    ``x``: (..., K); ``w``: (K, N).  Dynamic per-tensor activation quant,
+    per-output-channel weight quant unless QParams are provided (static PTQ).
+    """
+    mode = LunaMode(mode)
+    x_qp = x_qp or calibrate(x, bits, axis=None)
+    w_qp = w_qp or calibrate(w, bits, axis=-1)
+    qx = quantize(x, x_qp)
+    qw = quantize(w, w_qp)
+    k = x.shape[-1]
+
+    acc = luna_matmul(qx, qw, bits=bits, mode=mode).astype(jnp.float32)
+    colsum_qw = jnp.sum(qw, axis=0).astype(jnp.float32)           # (N,)
+    rowsum_qx = jnp.sum(qx, axis=-1, keepdims=True).astype(jnp.float32)
+    zx, zw = x_qp.zero_point, w_qp.zero_point
+    corrected = (acc
+                 - zx * colsum_qw
+                 - rowsum_qx * zw
+                 + k * zx * zw)
+    return (x_qp.scale * w_qp.scale) * corrected
+
+
+# ---------------------------------------------------------------------------
+# QAT: straight-through estimator — forward runs the exact LUNA integer path,
+# backward pretends it was a plain matmul.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def ste_luna_matmul(x: jax.Array, w: jax.Array, mode: str, bits: int = 4):
+    return luna_matmul_f32(x, w, mode, bits)
+
+
+def _ste_fwd(x, w, mode, bits):
+    return luna_matmul_f32(x, w, mode, bits), (x, w)
+
+
+def _ste_bwd(mode, bits, res, g):
+    x, w = res
+    gx = jnp.einsum("...n,kn->...k", g, w)
+    batch = x.reshape(-1, x.shape[-1])
+    gw = batch.T @ g.reshape(-1, g.shape[-1])
+    return gx.astype(x.dtype), gw.astype(w.dtype)
+
+
+ste_luna_matmul.defvjp(_ste_fwd, _ste_bwd)

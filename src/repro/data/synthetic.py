@@ -1,0 +1,44 @@
+"""Deterministic synthetic LM data pipeline, sharded across hosts.
+
+Produces a learnable (not pure-noise) stream so examples/e2e training shows a
+real loss curve: tokens follow a fixed random bigram chain plus noise, so a
+model can reduce loss well below uniform entropy.  Every batch is a pure
+function of (seed, step) — restarts and elastic resharding reproduce the
+exact stream with no data-state checkpointing.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+class SyntheticLM:
+    def __init__(self, vocab_size: int, seq_len: int, global_batch: int,
+                 seed: int = 0, noise: float = 0.3):
+        self.vocab = vocab_size
+        self.seq = seq_len
+        self.global_batch = global_batch
+        self.seed = seed
+        self.noise = noise
+        rng = np.random.default_rng(seed)
+        self.chain = rng.integers(0, vocab_size, vocab_size)  # bigram map
+
+    def batch_np(self, step: int) -> dict[str, np.ndarray]:
+        rng = np.random.default_rng((self.seed, step))
+        toks = np.empty((self.global_batch, self.seq + 1), np.int32)
+        toks[:, 0] = rng.integers(0, self.vocab, self.global_batch)
+        noise_mask = rng.random((self.global_batch, self.seq)) < self.noise
+        noise_tok = rng.integers(0, self.vocab, (self.global_batch, self.seq))
+        for t in range(self.seq):
+            nxt = self.chain[toks[:, t]]
+            toks[:, t + 1] = np.where(noise_mask[:, t], noise_tok[:, t], nxt)
+        return {"tokens": toks[:, :-1].astype(np.int32),
+                "labels": toks[:, 1:].astype(np.int32)}
+
+    def batch(self, step: int, shardings: dict | None = None) -> dict:
+        arrs = self.batch_np(step)
+        if shardings is None:
+            return {k: jnp.asarray(v) for k, v in arrs.items()}
+        return {k: jax.device_put(v, shardings[k]) for k, v in arrs.items()}

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: blockwise online-softmax (flash) attention, forward.
+
+Used for 32k prefill where materializing the (S, S) score matrix is not an
+option.  Grid: (batch*heads, S/bq, S/bkv) with the KV dimension innermost;
+running max/denominator/accumulator live in VMEM scratch (the standard TPU
+flash pipeline).  GQA is handled without materializing repeated KV heads:
+the KV BlockSpec index map folds the query head onto its KV group.
+
+VMEM working set per step (bq=256, bkv=512, d=128, f32):
+q 128 KiB + k/v 512 KiB + acc 128 KiB + stats ~2 KiB — well under 16 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  sm_scale: float, causal: bool, bq: int, bkv: int, nkv: int):
+    iq = pl.program_id(1)
+    ikv = pl.program_id(2)
+
+    @pl.when(ikv == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    def _body():
+        q = q_ref[0].astype(jnp.float32)                   # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                   # (bkv, d)
+        v = v_ref[0].astype(jnp.float32)                   # (bkv, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s *= sm_scale                                      # (bq, bkv)
+        if causal:
+            rows = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+            cols = ikv * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_ref[...]                                # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                             # (bq, bkv)
+        corr = jnp.exp(m_prev - m_new)                     # (bq, 1)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        # Skip fully-masked blocks (upper triangle).
+        pl.when(ikv * bkv <= iq * bq + bq - 1)(_body)
+    else:
+        _body()
+
+    @pl.when(ikv == nkv - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "causal", "bq",
+                                             "bkv", "num_q_heads",
+                                             "num_kv_heads", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    sm_scale: float, causal: bool = True,
+                    num_q_heads: int, num_kv_heads: int,
+                    bq: int = 256, bkv: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B*H, S, D); k/v: (B*Hkv, S, D).  Returns (B*H, S, D).
+
+    The KV index map folds each query head onto its GQA group, so KV is
+    never materialized per-query-head.
+    """
+    bh, s, d = q.shape
+    assert s % bq == 0 and s % bkv == 0, (s, bq, bkv)
+    group = num_q_heads // num_kv_heads
+    nkv = s // bkv
+
+    def kv_index(i, iq, ikv):
+        b = i // num_q_heads
+        h = i % num_q_heads
+        return (b * num_kv_heads + h // group, ikv, 0)
+
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, sm_scale=sm_scale, causal=causal,
+                          bq=bq, bkv=bkv, nkv=nkv),
+        grid=(bh, s // bq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda i, iq, ikv: (i, iq, 0)),
+            pl.BlockSpec((1, bkv, d), kv_index),
+            pl.BlockSpec((1, bkv, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda i, iq, ikv: (i, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

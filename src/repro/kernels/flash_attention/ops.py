@@ -1,0 +1,38 @@
+"""Public attention entry point: picks flash kernel vs jnp by context."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def mha(q: jax.Array, k: jax.Array, v: jax.Array, *, sm_scale: float,
+        causal: bool = True, use_flash: bool = False,
+        interpret: bool | None = None) -> jax.Array:
+    """Multi-head attention with GQA.
+
+    q: (B, S, H, D); k/v: (B, S, Hkv, D) -> (B, S, H, D).
+    ``use_flash`` routes through the Pallas kernel (TPU target; interpret on
+    CPU).  The jnp path is differentiable and used for training.
+    """
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)
+    if use_flash:
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        bq = min(256, s)
+        bkv = min(512, s)
+        out = flash_attention(qf, kf, vf, sm_scale=sm_scale, causal=causal,
+                              num_q_heads=h, num_kv_heads=hkv, bq=bq,
+                              bkv=bkv, interpret=interpret)
+    else:
+        out = attention_ref(qf, kf, vf, sm_scale=sm_scale, causal=causal,
+                            num_q_heads=h, num_kv_heads=hkv)
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for flash attention (materializes the score matrix)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  sm_scale: float, causal: bool = True,
+                  num_q_heads: int = 1, num_kv_heads: int = 1) -> jax.Array:
+    """q: (B*H, S, D); k/v: (B*Hkv, S, D)."""
+    bh, s, d = q.shape
+    b = bh // num_q_heads
+    group = num_q_heads // num_kv_heads
+    qq = q.reshape(b, num_kv_heads, group, s, d).astype(jnp.float32)
+    kk = k.reshape(b, num_kv_heads, 1, s, d).astype(jnp.float32)
+    vv = v.reshape(b, num_kv_heads, 1, s, d).astype(jnp.float32)
+    scores = jnp.einsum("bhgqd,bhgkd->bhgqk", qq, jnp.broadcast_to(kk, qq.shape))
+    scores = scores * sm_scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bhgkd->bhgqd", p, jnp.broadcast_to(vv, qq.shape))
+    return out.reshape(bh, s, d).astype(q.dtype)

@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: LUNA D&C quantized GEMM (digit-plane formulation).
+
+Computes ``Z[m, n] = sum_k L(W[k, n], Y[m, k])`` where ``L`` is the LUNA
+multiplier in one of the paper's modes.  TPU mapping (DESIGN.md section 2):
+
+  * the radix-4 digit split of Y becomes two int8 digit-plane tiles
+    (``y >> 2`` and ``y & 3``) staged in VMEM,
+  * each "lookup" of the 4-entry table {0, W, 2W, 3W} is an int8 MXU matmul
+    of a digit plane against the weight tile (the table is linear in W),
+  * the paper's HA/FA shift-add combine is the int32 ``(hi << 2) + lo``,
+  * ApproxD&C drops the low plane -> HALF the MXU work,
+  * ApproxD&C2 adds ``colsum(W)`` instead -> accumulated per K-tile, a
+    VPU-only reduction (the "free bias").
+
+Grid: ``(M/bm, N/bn, K/bk)`` with K innermost; the int32 accumulator lives in
+a VMEM scratch tile and is flushed to the output on the last K step — the
+standard TPU matmul pipeline shape.  Block sizes default to MXU-aligned
+(128, 128) output tiles with a 256-deep K so that the two int8 digit tiles
+(2 x 128 x 256 B), the weight tile (256 x 128 B) and the int32 accumulator
+(128 x 128 x 4 B) comfortably fit VMEM (~160 KiB working set).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.luna import LunaMode
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 256
+
+
+def _luna_mm_kernel(y_ref, w_ref, o_ref, acc_ref, *, mode: str, nk: int):
+    """One (bm, bn) output tile; K streamed over the innermost grid dim."""
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    y = y_ref[...]                      # (bm, bk) int8 codes in [0, 16)
+    w = w_ref[...]                      # (bk, bn) int8 codes in [0, 16)
+
+    dims = (((1,), (0,)), ((), ()))
+    hi = (y >> 2).astype(jnp.int8)
+    acc = acc_ref[...]
+    # MSB-side lookup: digit-plane matmul on the MXU.
+    z_hi = jax.lax.dot_general(hi, w, dims, preferred_element_type=jnp.int32)
+    if mode in (LunaMode.APPROX_DC.value, LunaMode.APPROX_DC2.value):
+        acc += z_hi << 2
+        if mode == LunaMode.APPROX_DC2.value:
+            # Z_LSB := W  ->  colsum of this K tile, broadcast over rows.
+            acc += jnp.sum(w.astype(jnp.int32), axis=0)[None, :]
+    elif mode == LunaMode.CONVENTIONAL.value:
+        # Full-LUT semantics == one full-width code matmul (exact).
+        acc = acc + jax.lax.dot_general(y, w, dims,
+                                        preferred_element_type=jnp.int32)
+    else:  # exact D&C (dc / opt_dc): both digit planes.
+        lo = (y & 3).astype(jnp.int8)
+        z_lo = jax.lax.dot_general(lo, w, dims,
+                                   preferred_element_type=jnp.int32)
+        acc += (z_hi << 2) + z_lo
+    acc_ref[...] = acc
+
+    @pl.when(k_step == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "bm", "bn", "bk",
+                                             "interpret"))
+def luna_mm(y_codes: jax.Array, w_codes: jax.Array, *, mode: str = "opt_dc",
+            bm: int = DEFAULT_BM, bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+            interpret: bool = False) -> jax.Array:
+    """LUNA GEMM on unsigned 4-bit codes carried in int8.
+
+    ``y_codes``: (M, K) int8; ``w_codes``: (K, N) int8; returns (M, N) int32.
+    Shapes must be multiples of the block sizes (the ops.py wrapper pads).
+    """
+    m, k = y_codes.shape
+    k2, n = w_codes.shape
+    assert k == k2, (y_codes.shape, w_codes.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    nk = k // bk
+    mode = LunaMode(mode).value
+
+    return pl.pallas_call(
+        functools.partial(_luna_mm_kernel, mode=mode, nk=nk),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(y_codes, w_codes)

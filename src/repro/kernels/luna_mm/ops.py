@@ -1,0 +1,87 @@
+"""Jit'd public wrappers around the LUNA GEMM Pallas kernel.
+
+Handles shape padding to block multiples and the float-in/float-out
+quantize -> integer kernel -> zero-point-correct -> dequantize pipeline.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.luna import LunaMode
+from repro.core.quant import calibrate, quantize
+from repro.kernels.luna_mm.luna_mm import luna_mm
+
+_ON_TPU = None
+
+
+def _interpret_default() -> bool:
+    """Pallas TPU kernels run under interpret=True everywhere else."""
+    global _ON_TPU
+    if _ON_TPU is None:
+        _ON_TPU = jax.default_backend() == "tpu"
+    return not _ON_TPU
+
+
+def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
+    pads = [(0, (-d) % m) for d, m in zip(x.shape, mults)]
+    if any(p[1] for p in pads):
+        x = jnp.pad(x, pads)
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "bm", "bn", "bk",
+                                             "interpret"))
+def luna_mm_codes(y_codes: jax.Array, w_codes: jax.Array, *,
+                  mode: str = "opt_dc", bm: int = 128, bn: int = 128,
+                  bk: int = 256, interpret: bool | None = None) -> jax.Array:
+    """Code-space LUNA GEMM with automatic padding.  int8 codes -> int32."""
+    if interpret is None:
+        interpret = _interpret_default()
+    m, k = y_codes.shape
+    n = w_codes.shape[1]
+    bm_, bn_, bk_ = (min(bm, _ceil_mult(m)), min(bn, _ceil_mult(n)),
+                     min(bk, _ceil_mult(k)))
+    yp = _pad_to(y_codes.astype(jnp.int8), (bm_, bk_))
+    wp = _pad_to(w_codes.astype(jnp.int8), (bk_, bn_))
+    # NB zero padding is exact for every mode: zero codes contribute zero to
+    # all digit planes and to colsum(W).
+    out = luna_mm(yp, wp, mode=mode, bm=bm_, bn=bn_, bk=bk_,
+                  interpret=interpret)
+    return out[:m, :n]
+
+
+def _ceil_mult(d: int, base: int = 8) -> int:
+    """Largest power-of-two block <= d (>=8) so tiny shapes still work."""
+    b = base
+    while b * 2 <= d:
+        b *= 2
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "bits", "interpret"))
+def luna_matmul_f32_kernel(x: jax.Array, w: jax.Array, *, mode: str = "opt_dc",
+                           bits: int = 4,
+                           interpret: bool | None = None) -> jax.Array:
+    """Float GEMM through the integer kernel (dynamic PTQ, zero-point algebra).
+
+    Mirrors ``repro.core.quant.luna_matmul_f32`` but runs the contraction in
+    the Pallas kernel.  bits is fixed at 4 (the kernel's digit planes).
+    """
+    assert bits == 4, "the Pallas kernel implements the paper's 4b datapath"
+    x_qp = calibrate(x, bits, axis=None)
+    w_qp = calibrate(w, bits, axis=-1)
+    qx = quantize(x, x_qp)
+    qw = quantize(w, w_qp)
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    acc = luna_mm_codes(qx.reshape(-1, k), qw, mode=mode,
+                        interpret=interpret).astype(jnp.float32)
+    acc = acc.reshape(*lead, w.shape[-1])
+    colsum_qw = jnp.sum(qw, axis=0).astype(jnp.float32)
+    rowsum_qx = jnp.sum(qx, axis=-1, keepdims=True).astype(jnp.float32)
+    zx, zw = x_qp.zero_point, w_qp.zero_point
+    corrected = acc - zx * colsum_qw - rowsum_qx * zw + k * zx * zw
+    return (x_qp.scale * w_qp.scale) * corrected

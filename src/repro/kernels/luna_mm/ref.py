@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the LUNA GEMM kernel (no Pallas)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.luna import LunaMode
+
+
+def luna_mm_ref(y_codes: jax.Array, w_codes: jax.Array,
+                mode: str = "opt_dc") -> jax.Array:
+    """Reference: digit-split int32 math, no tiling, no int8 casts."""
+    mode = LunaMode(mode)
+    y = y_codes.astype(jnp.int32)
+    w = w_codes.astype(jnp.int32)
+    hi, lo = y >> 2, y & 3
+    if mode == LunaMode.APPROX_DC:
+        return (hi @ w) << 2
+    if mode == LunaMode.APPROX_DC2:
+        return ((hi @ w) << 2) + jnp.sum(w, axis=0)[None, :]
+    return y @ w  # all exact modes equal the true product

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: programmable-LUT (codebook) weight-only GEMM.
+
+The "programmable" half of LUNA-CIM: weights are 4-bit *codes* into an
+arbitrary 16-entry codebook (uniform int4, NF4, or any learned table).  The
+kernel dequantizes each (bk, bn) weight tile in VMEM through the paper's
+binary mux tree — ``2**b - 1 = 15`` vector selects on the code bits, the
+exact analogue of the paper's fifteen 2:1 muxes — then feeds the MXU.
+
+Memory layout per grid step: x tile (bm, bk) bf16/f32, packed codes tile
+(bk, bn) int8, dequantized tile (bk, bn) f32 (transient), accumulator
+(bm, bn) f32 in VMEM scratch.  Per-output-channel scales are applied in the
+epilogue on the final K step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 256
+
+
+def _mux_tree_dequant(codes: jax.Array, cb_ref) -> jax.Array:
+    """Paper's mux tree: 15 binary selects on the 4 code bits.
+
+    ``codes``: (bk, bn) int8 in [0, 16); ``cb_ref``: (1, 16) codebook.
+    """
+    leaves = [cb_ref[0, j] for j in range(16)]   # scalar leaves
+    bits = [((codes >> b) & 1).astype(bool) for b in range(4)]
+    level = leaves
+    for b in range(4):                            # 8 + 4 + 2 + 1 = 15 selects
+        level = [jnp.where(bits[b], level[2 * i + 1], level[2 * i])
+                 for i in range(len(level) // 2)]
+    return level[0]
+
+
+def _lut_gemm_kernel(x_ref, codes_ref, cb_ref, scale_ref, o_ref, acc_ref, *,
+                     nk: int):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = _mux_tree_dequant(codes_ref[...], cb_ref)          # (bk, bn) f32
+    x = x_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(k_step == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...] * scale_ref[...]         # (1, bn) broadcast
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def lut_gemm(x: jax.Array, w_codes: jax.Array, codebook: jax.Array,
+             scale: jax.Array, *, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+             bk: int = DEFAULT_BK, interpret: bool = False) -> jax.Array:
+    """``x @ (codebook[w_codes] * scale)`` with in-VMEM LUT dequant.
+
+    x: (M, K) float; w_codes: (K, N) int8; codebook: (16,) f32;
+    scale: (N,) f32 per-output-channel.  Returns (M, N) f32.
+    """
+    m, k = x.shape
+    k2, n = w_codes.shape
+    assert k == k2 and codebook.shape == (16,)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    nk = k // bk
+
+    return pl.pallas_call(
+        functools.partial(_lut_gemm_kernel, nk=nk),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, 16), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w_codes, codebook.reshape(1, 16), scale.reshape(1, n))

@@ -1,0 +1,44 @@
+"""Public wrappers: codebook quantize + LUT GEMM (weight-only 4-bit)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lut import NF4_CODEBOOK
+from repro.kernels.lut_gemm.lut_gemm import lut_gemm
+
+
+def codebook_quantize(w: jax.Array, codebook: jax.Array
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Per-output-channel absmax normalize + nearest-codebook-entry encode."""
+    scale = jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-8)
+    wn = w / scale
+    codes = jnp.argmin(jnp.abs(wn[..., None] - codebook), axis=-1)
+    return codes.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def nf4_matmul_kernel(x: jax.Array, w: jax.Array,
+                      interpret: bool = True) -> jax.Array:
+    """Float GEMM with NF4 codebook weights through the Pallas LUT kernel."""
+    cb = jnp.asarray(NF4_CODEBOOK)
+    codes, scale = codebook_quantize(w, cb)
+    m, k = x.shape
+    n = w.shape[1]
+    bm = _fit(m)
+    bn = _fit(n)
+    bk = _fit(k)
+    xp = jnp.pad(x, [(0, (-m) % bm), (0, (-k) % bk)])
+    cp = jnp.pad(codes, [(0, (-k) % bk), (0, (-n) % bn)])
+    sp = jnp.pad(scale, [(0, (-n) % bn)])
+    out = lut_gemm(xp, cp, cb, sp, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out[:m, :n]
+
+
+def _fit(d: int, base: int = 8) -> int:
+    b = base
+    while b * 2 <= d and b < 256:
+        b *= 2
+    return b

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the codebook LUT GEMM."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lut_gemm_ref(x: jax.Array, w_codes: jax.Array, codebook: jax.Array,
+                 scale: jax.Array) -> jax.Array:
+    w = codebook[w_codes.astype(jnp.int32)] * scale[None, :]
+    return (x.astype(jnp.float32) @ w).astype(jnp.float32)

@@ -1,0 +1,35 @@
+"""Model-facing wrapper: (B, S, H, P) tensors -> flattened head-streams."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunked_kernel(x, dt, a, b, c, *, chunk: int = 128,
+                       interpret: bool = True):
+    """x: (B,S,H,P); dt: (B,S,H); a: (H,); b/c: (B,S,G,N) with G|H.
+
+    Returns (y (B,S,H,P) f32, final_state (B,H,P,N)) matching
+    ``repro.models.ssm._ssd_chunked``.
+    """
+    bb, s, h, p = x.shape
+    g = b.shape[2]
+    hg = h // g
+    n = b.shape[-1]
+    xf = x.transpose(0, 2, 1, 3).reshape(bb * h, s, p)
+    dtf = dt.transpose(0, 2, 1).reshape(bb * h, s)
+    bh_b = jnp.repeat(b, hg, axis=2).transpose(0, 2, 1, 3).reshape(
+        bb * h, s, n)
+    ch_c = jnp.repeat(c, hg, axis=2).transpose(0, 2, 1, 3).reshape(
+        bb * h, s, n)
+    af = jnp.tile(a, bb)
+    y, fs = ssd_scan(xf, dtf, af, bh_b, ch_c, chunk=chunk,
+                     interpret=interpret)
+    y = y.reshape(bb, h, s, p).transpose(0, 2, 1, 3)
+    fs = fs.reshape(bb, h, n, p).transpose(0, 1, 3, 2)   # (B,H,P,N)
+    return y, fs

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the SSD chunk-scan kernel (naive O(S^2) recurrence)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+            c: jax.Array):
+    """Sequential state-space recurrence, one token at a time.
+
+    x: (BH, S, P); dt: (BH, S); a: (BH,); b/c: (BH, S, N).
+    y_t = C_t^T S_t;  S_t = exp(dt_t a) S_{t-1} + dt_t B_t x_t^T.
+    Returns (y (BH,S,P), final_state (BH,N,P)).
+    """
+    bh, s, p = x.shape
+    n = b.shape[-1]
+
+    def per_stream(xs, dts, aa, bs, cs):
+        def step(state, inp):
+            x_t, dt_t, b_t, c_t = inp
+            decay = jnp.exp(dt_t * aa)
+            state = decay * state + dt_t * b_t[:, None] * x_t[None, :]
+            y_t = c_t @ state                       # (P,)
+            return state, y_t
+
+        init = jnp.zeros((n, p), jnp.float32)
+        final, ys = jax.lax.scan(step, init, (xs, dts, bs, cs))
+        return ys, final
+
+    return jax.vmap(per_stream)(x.astype(jnp.float32), dt.astype(jnp.float32),
+                                a.astype(jnp.float32), b.astype(jnp.float32),
+                                c.astype(jnp.float32))

@@ -1,0 +1,288 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) cell.
+
+For each supported cell this script:
+  1. builds the production mesh (16x16 single pod / 2x16x16 multi-pod),
+  2. constructs ShapeDtypeStruct stand-ins for params / optimizer / batch /
+     caches with full NamedShardings,
+  3. ``jax.jit(step, in_shardings=...).lower(...).compile()``,
+  4. records memory_analysis() / cost_analysis() / collective bytes
+     into results/dryrun/<cell>.json (read later by the roofline report).
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k [--multipod]
+  python -m repro.launch.dryrun --all            # every cell, both meshes
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ALL_SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.parallel.act_sharding import activation_sharding
+from repro.launch.roofline import (active_params, collective_bytes,
+                                   count_params, model_flops, roofline_terms)
+from repro.models.registry import (ARCH_IDS, cell_supported, get_config,
+                                   get_model, input_specs)
+from repro.optim.adamw import AdamW
+from repro.parallel import sharding as shd
+from repro.train.train_step import make_train_step
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _sds_tree(tree):
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               quant: str = "bf16", extra_cfg: dict | None = None) -> dict:
+    shape = {s.name: s for s in ALL_SHAPES}[shape_name]
+    ok, why = cell_supported(arch, shape)
+    if not ok:
+        return {"status": "skip", "reason": why}
+
+    cfg = get_config(arch, **(extra_cfg or {}))
+    if quant != "bf16":
+        from repro.core.layers import QuantConfig
+        from dataclasses import replace
+        cfg = replace(cfg, quant=QuantConfig(mode=quant))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    model = get_model(cfg)
+    t0 = time.time()
+
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    serve_tp = (shape.kind != "train"
+                and getattr(cfg, "serve_param_sharding", "fsdp") == "tp")
+    p_sh = shd.param_shardings(params_shape, mesh, serve_tp=serve_tp)
+    n_params = count_params(params_shape)
+
+    if shape.kind == "train":
+        opt = AdamW()
+        step_fn, _ = make_train_step(cfg, opt, mesh)
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        from repro.optim.adamw import AdamWState
+        opt_sh = AdamWState(shd.scalar_sharding(mesh), p_sh, p_sh)
+        batch_shape = input_specs(cfg, shape)
+        b_sh = shd.batch_shardings(batch_shape, mesh)
+        with mesh, activation_sharding(mesh):
+            lowered = jax.jit(
+                step_fn, in_shardings=(p_sh, opt_sh, b_sh),
+                donate_argnums=(0, 1),
+            ).lower(params_shape, opt_shape, batch_shape)
+    elif shape.kind == "prefill":
+        batch_shape = input_specs(cfg, shape)
+        b_sh = shd.batch_shardings(batch_shape, mesh)
+        cache_shape = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len))
+        c_sh = shd.cache_shardings(cache_shape, mesh)
+
+        def prefill_step(params, batch, caches):
+            kwargs = {k: v for k, v in batch.items()
+                      if k in ("frames", "patches")}
+            toks = batch["tokens"]
+            return model.prefill(params, toks, caches, **kwargs)
+
+        with mesh, activation_sharding(mesh):
+            lowered = jax.jit(
+                prefill_step, in_shardings=(p_sh, b_sh, c_sh),
+                donate_argnums=(2,),
+            ).lower(params_shape, batch_shape, cache_shape)
+    else:  # decode
+        b = shape.global_batch
+        cache_shape = jax.eval_shape(
+            lambda: model.init_cache(b, shape.seq_len))
+        # enc-dec serve state = (caches, enc_out)
+        if cfg.family == "encdec":
+            enc_out = jax.ShapeDtypeStruct(
+                (b, cfg.encdec.enc_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+            cache_shape = (cache_shape, enc_out)
+        c_sh = shd.cache_shardings(cache_shape, mesh)
+        tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        tok_sh = shd.batch_shardings({"token": tok}, mesh)["token"]
+        idx = jax.ShapeDtypeStruct((), jnp.int32)
+
+        def decode_step(params, token, caches, index):
+            return model.decode_step(params, token, caches, index)
+
+        with mesh, activation_sharding(mesh):
+            lowered = jax.jit(
+                decode_step,
+                in_shardings=(p_sh, tok_sh, c_sh, shd.scalar_sharding(mesh)),
+                donate_argnums=(2,),
+            ).lower(params_shape, tok, cache_shape, idx)
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    mf = model_flops(cfg, shape, n_params, active_params(cfg, n_params))
+    rec = {
+        "status": "ok", "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "quant": quant,
+        "n_params": n_params, "n_active_params": active_params(cfg, n_params),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "hlo_flops": flops, "hlo_bytes": bytes_acc,
+        "collective_bytes": coll["total"],
+        "collective_breakdown": {k: coll[k] for k in
+                                 ("all-gather", "all-reduce",
+                                  "reduce-scatter", "all-to-all",
+                                  "collective-permute")},
+        "collective_op_counts": coll["op_counts"],
+        "model_flops": mf,
+        "memory_analysis": {
+            "bytes_per_device_argument": int(
+                getattr(mem, "argument_size_in_bytes", 0)),
+            "bytes_per_device_output": int(
+                getattr(mem, "output_size_in_bytes", 0)),
+            "bytes_per_device_temp": int(
+                getattr(mem, "temp_size_in_bytes", 0)),
+            "bytes_per_device_peak_estimate": int(
+                getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0)),
+        },
+    }
+    return rec
+
+
+def account_cell(arch: str, shape_name: str, multi_pod: bool,
+                 quant: str = "bf16", extra_cfg: dict | None = None) -> dict:
+    """Exact per-device totals via unrolled layer-count probes
+    (see launch/accounting.py — fixes the while-loop undercount)."""
+    from repro.launch.accounting import extrapolate, probe_plan
+    shape = {s.name: s for s in ALL_SHAPES}[shape_name]
+    cfg = get_config(arch, **(extra_cfg or {}))
+    if (cfg.ssm is not None and shape.kind != "decode"
+            and shape.seq_len > 8192):
+        # unrolled SSD probes at 128+ chunks are prohibitively slow to
+        # compile on this host: use the documented analytic-FLOPs fallback
+        # (bytes/collectives stay scanned-raw lower bounds).
+        from repro.launch.roofline import analytic_flops
+        return {"status": "analytic",
+                "hlo_flops": analytic_flops(cfg, shape)}
+    probes, full = probe_plan(cfg, shape.kind)
+    recs = []
+    for over, _counts in probes:
+        r = lower_cell(arch, shape_name, multi_pod, quant=quant,
+                       extra_cfg={**(extra_cfg or {}), **over})
+        if r["status"] != "ok":
+            return {"status": "fail", "error": "probe failed: "
+                    + r.get("error", "?")}
+        recs.append(r)
+    return {"status": "ok", **extrapolate(recs, probes, full)}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             quant: str = "bf16", extra_cfg: dict | None = None) -> dict:
+    """Full record: real (scanned) lowering + probe-extrapolated roofline."""
+    rec = lower_cell(arch, shape_name, multi_pod, quant=quant,
+                     extra_cfg=extra_cfg)
+    if rec["status"] != "ok":
+        return rec
+    acct = account_cell(arch, shape_name, multi_pod, quant=quant,
+                        extra_cfg=extra_cfg)
+    if acct["status"] == "analytic":
+        rec["accounting"] = "analytic_flops+scanned_bytes"
+        rec["scanned_raw"] = {k: rec[k] for k in
+                              ("hlo_flops", "hlo_bytes", "collective_bytes")}
+        # analytic flops are GLOBAL; convert to the per-device convention
+        rec["hlo_flops"] = flops = acct["hlo_flops"] / rec["chips"]
+        bytes_acc = rec["hlo_bytes"]
+        coll = rec["collective_bytes"]
+    elif acct["status"] != "ok":
+        rec["accounting_error"] = acct["error"]
+        flops, bytes_acc = rec["hlo_flops"], rec["hlo_bytes"]
+        coll = rec["collective_bytes"]
+    else:
+        rec["scanned_raw"] = {k: rec[k] for k in
+                              ("hlo_flops", "hlo_bytes", "collective_bytes")}
+        rec["hlo_flops"] = flops = acct["hlo_flops"]
+        rec["hlo_bytes"] = bytes_acc = acct["hlo_bytes"]
+        rec["collective_bytes"] = coll = acct["collective_bytes"]
+        rec["collective_breakdown"] = {
+            "all-gather": acct["coll_all_gather"],
+            "all-reduce": acct["coll_all_reduce"],
+            "reduce-scatter": acct["coll_reduce_scatter"],
+            "all-to-all": acct["coll_all_to_all"],
+            "collective-permute": acct["coll_collective_permute"]}
+        rec["probe_residual"] = acct["probe_residual"]
+    # NOTE: cost_analysis is per-device (partitioned module); roofline terms
+    # divide global work by chips, so scale per-device -> global first.
+    chips = rec["chips"]
+    terms = roofline_terms(flops * chips, bytes_acc * chips, coll * chips,
+                           chips)
+    rec.update(terms)
+    rec["useful_flops_ratio"] = (rec["model_flops"] / (flops * chips)
+                                 if flops else 0.0)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--quant", default="bf16")
+    args = ap.parse_args()
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = ([s.name for s in ALL_SHAPES] if (args.all or not args.shape)
+              else [args.shape])
+    meshes = [False, True] if (args.all or args.both_meshes) else [args.multipod]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'mp' if mp else 'sp'}"
+                if args.quant != "bf16":
+                    tag += f"__{args.quant}"
+                out_path = RESULTS / f"{tag}.json"
+                if out_path.exists():
+                    print(f"[cached] {tag}")
+                    continue
+                print(f"[lower ] {tag} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape, mp, quant=args.quant)
+                except Exception as e:  # noqa: BLE001
+                    rec = {"status": "fail", "error": str(e)[:2000],
+                           "traceback": traceback.format_exc()[-4000:]}
+                    failures += 1
+                out_path.write_text(json.dumps(rec, indent=1))
+                if rec["status"] == "ok":
+                    print(f"   ok: compile={rec['compile_s']}s "
+                          f"dominant={rec['dominant']} "
+                          f"roofline={rec['roofline_fraction']:.3f} "
+                          f"peak/dev={rec['memory_analysis']['bytes_per_device_peak_estimate']/2**30:.2f}GiB",
+                          flush=True)
+                elif rec["status"] == "skip":
+                    print(f"   skip: {rec['reason']}")
+                else:
+                    print(f"   FAIL: {rec['error'][:300]}")
+    print(f"done; failures={failures}")
+    return failures
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

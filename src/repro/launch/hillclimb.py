@@ -1,0 +1,89 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Perf hillclimb driver: run a named variant of a cell and record the
+roofline delta vs baseline into results/perf/<cell>__<variant>.json.
+
+Usage:
+  python -m repro.launch.hillclimb --arch deepseek-67b --shape decode_32k \
+      --variant sharded_decode
+"""
+import argparse
+import json
+from pathlib import Path
+
+from repro.launch.dryrun import run_cell
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "perf"
+
+# variant name -> cfg overrides
+VARIANTS = {
+    "baseline": {},
+    # decode: flash-decode shard_map (kills cache-reshard collectives)
+    "sharded_decode": {"decode_attn": "sharded"},
+    # decode iteration 2: + TP-only param sharding (no FSDP weight
+    # all-gathers per token)
+    "sharded_decode+tp": {"decode_attn": "sharded",
+                          "serve_param_sharding": "tp"},
+    # decode iteration 3: + grouped-bf16 flash-decode operands
+    "sharded_decode+tp+bf16": {"decode_attn": "sharded",
+                               "serve_param_sharding": "tp",
+                               "decode_attn_precision": "bf16_grouped"},
+    # train/prefill: bf16 attention operands (halves attention HBM bytes)
+    "bf16_attn": {"attn_f32": False},
+    # remat policy: save matmul outputs instead of recomputing everything
+    "save_dots": {"remat_policy": "dots"},
+    # larger attention chunk (fewer chunk-loop iterations, bigger tiles)
+    "chunk_1024": {"attn_chunk": 1024},
+    "chunk_2048": {"attn_chunk": 2048},
+    # combined winners
+    "bf16_attn+save_dots": {"attn_f32": False, "remat_policy": "dots"},
+    "bf16_attn+chunk_2048": {"attn_f32": False, "attn_chunk": 2048},
+    # fused scale+mask (one where() vs mul + broadcast-bias add)
+    "fused_mask": {"attn_fused_mask": True},
+    # flash-kernel block skipping modeled in accounting (halves causal work)
+    "causal_skip": {"attn_fused_mask": True, "attn_causal_skip": True},
+    "causal_skip+save_dots": {"attn_fused_mask": True,
+                              "attn_causal_skip": True,
+                              "remat_policy": "dots"},
+    "causal_skip+bf16": {"attn_fused_mask": True, "attn_causal_skip": True,
+                         "attn_f32": False},
+    "sharded_decode+bf16_attn": {"decode_attn": "sharded", "attn_f32": False},
+}
+
+
+def run_variant(arch: str, shape: str, variant: str, multi_pod: bool = False,
+                quant: str = "bf16") -> dict:
+    overrides = dict(VARIANTS[variant])
+    rec = run_cell(arch, shape, multi_pod, quant=quant, extra_cfg=overrides)
+    rec["variant"] = variant
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    tag = f"{arch}__{shape}__{'mp' if multi_pod else 'sp'}__{variant}"
+    if quant != "bf16":
+        tag += f"__{quant}"
+    (RESULTS / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True, choices=sorted(VARIANTS))
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--quant", default="bf16")
+    args = ap.parse_args()
+    rec = run_variant(args.arch, args.shape, args.variant, args.multipod,
+                      args.quant)
+    if rec["status"] != "ok":
+        print("FAIL", rec.get("error", "")[:500])
+        return 1
+    print(json.dumps({k: rec[k] for k in
+                      ("variant", "compute_s", "memory_s", "collective_s",
+                       "dominant", "roofline_fraction")}, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

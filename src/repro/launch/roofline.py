@@ -1,0 +1,160 @@
+"""Roofline term derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (DESIGN.md section 7):
+
+    compute    = HLO_FLOPs      / (chips x 197e12 FLOP/s)      [bf16 MXU]
+    memory     = HLO_bytes      / (chips x 819e9  B/s)         [HBM]
+    collective = collective_B   / (chips x 45e9   B/s)         [ICI]
+
+``cost_analysis()`` supplies FLOPs/bytes; collective bytes are parsed from
+the compiled HLO text by summing operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op.
+"""
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12          # bf16 per chip (TPU v5e)
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 45e9                # B/s effective per chip (assignment: ~50 GB/s/link)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  "bf16[16,512,128]{2,1,0}"  or "f32[]"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in the HLO.
+
+    Returns {op_kind: bytes} plus "total".  Uses the op's result shape
+    (per-participant payload) — the standard proxy for link traffic.
+    """
+    out: dict[str, float] = {k: 0 for k in _COLLECTIVES}
+    n_ops: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # match:  %name = <shape> <op-kind>(...)
+        m = re.match(r"%?[\w.\-]+ = ([^=]*?) (all-gather|all-reduce|"
+                     r"reduce-scatter|all-to-all|collective-permute)", ls)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        if "-start" in ls.split("(")[0] and kind not in ls.split("(")[0]:
+            pass
+        out[kind] += _shape_bytes(shape_str)
+        n_ops[kind] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["op_counts"] = n_ops
+    return out
+
+
+def roofline_terms(flops: float, bytes_accessed: float, coll_bytes: float,
+                   chips: int) -> dict:
+    compute = flops / (chips * PEAK_FLOPS)
+    memory = bytes_accessed / (chips * HBM_BW)
+    collective = coll_bytes / (chips * ICI_BW)
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    bound = max(compute, memory, collective)
+    terms["dominant"] = dom
+    terms["step_time_lb_s"] = bound
+    terms["roofline_fraction"] = compute / bound if bound > 0 else 0.0
+    return terms
+
+
+def model_flops(cfg, shape, n_params: int, n_active: int | None = None) -> float:
+    """MODEL_FLOPS: 6·N·D for training, 2·N per decoded token."""
+    n = n_active if n_active is not None else n_params
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def analytic_flops(cfg, shape) -> float:
+    """Closed-form HLO-FLOP estimate for SSD-family cells whose unrolled
+    probes are prohibitively expensive to compile (zamba2/mamba2 at 32k+).
+
+    Counts matmul FLOPs only (2*M*N*K), x4 for training (fwd + full-remat
+    recompute + 2x fwd for bwd), matching the probe-measured ratio on the
+    cells where both methods ran (train_4k: analytic/probe ~ 0.9-1.1).
+    """
+    t = shape.global_batch * shape.seq_len if shape.kind != "decode" \
+        else shape.global_batch
+    s = shape.seq_len if shape.kind != "decode" else 1
+    d = cfg.d_model
+    sc = cfg.ssm
+    f = 0.0
+    if sc is not None:
+        d_inner = sc.expand * d
+        h = d_inner // sc.head_dim
+        gn = sc.num_groups * sc.state_dim
+        conv_ch = d_inner + 2 * gn
+        in_dim = 2 * d_inner + 2 * gn + h
+        per_tok = (2 * d * in_dim + 2 * conv_ch * sc.conv_dim
+                   + 2 * d_inner * d)
+        q = min(sc.chunk_size, s)
+        # SSD per token: intra (CB^T: q*gn*2; y: q*h*... per-token share)
+        ssd_per_tok = (2 * q * gn            # C B^T column
+                       + 2 * q * h * sc.head_dim / max(h, 1) * h  # y_intra
+                       + 4 * h * sc.head_dim * sc.state_dim)      # states+inter
+        n_ssm = cfg.num_layers
+        f += t * n_ssm * (per_tok + ssd_per_tok)
+    if cfg.hybrid is not None:
+        hc = cfg.hybrid
+        hd = d // hc.shared_num_heads
+        n_app = (cfg.num_layers + hc.period - 1) // hc.period
+        qkvo = 2 * d * hd * (2 * hc.shared_num_heads
+                             + 2 * hc.shared_num_kv_heads)
+        mlp3 = 3 * 2 * d * hc.shared_d_ff
+        scores = 4 * s * hc.shared_num_heads * hd  # 2 matmuls x S keys
+        f += t * n_app * (qkvo + mlp3 + scores)
+    f += 2.0 * t * d * cfg.vocab_size          # logits
+    if shape.kind == "train":
+        f *= 4.0                                # remat + backward
+    return f
+
+
+def count_params(params_shape) -> int:
+    import jax
+    import numpy as np
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(params_shape)))
+
+
+def active_params(cfg, n_params: int) -> int:
+    """MoE: subtract non-activated expert weight (top_k+shared of E)."""
+    if cfg.moe is None:
+        return n_params
+    mc = cfg.moe
+    # per-layer routed expert params
+    per_expert = 3 * cfg.d_model * mc.d_expert
+    n_moe_layers = cfg.num_layers - mc.first_dense
+    routed_total = n_moe_layers * mc.num_experts * per_expert
+    routed_active = n_moe_layers * mc.top_k * per_expert
+    return n_params - routed_total + routed_active

@@ -1,0 +1,53 @@
+"""Serving CLI: batched requests against any assigned arch (reduced or full).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --reduced \
+      --quant luna_approx --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--quant", default="bf16")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    args = ap.parse_args()
+
+    import jax
+    import numpy as np
+
+    from repro.core.layers import QuantConfig
+    from repro.models.registry import get_config, get_model
+    from repro.serve.engine import Engine, Request
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.quant != "bf16":
+        from dataclasses import replace
+        cfg = replace(cfg, quant=QuantConfig(mode=args.quant))
+
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(cfg, params, max_batch=args.max_batch,
+                    max_seq=args.max_seq)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size, 6).tolist(),
+                    max_new=args.max_new)
+            for i in range(args.requests)]
+    stats = engine.serve(reqs)
+    tok_count = sum(len(r.out) for r in reqs)
+    print(f"{tok_count} tokens over {len(reqs)} requests: "
+          f"{stats['wall_s']:.2f}s wall, done={stats['done']}")
+
+
+if __name__ == "__main__":
+    main()

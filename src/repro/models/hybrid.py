@@ -1,0 +1,164 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one weight-SHARED attention block
+applied every ``period`` layers.
+
+Layers are processed in groups: [shared attn+MLP block] -> scan over
+``period`` mamba2 layers.  The shared block's *weights* are reused at every
+application point, but each application keeps its own KV cache (stacked over
+groups) — the hybrid runs the ``long_500k`` cell with the attention caches
+sharded over the model axis.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layers import quant_matmul
+from repro.models import attention as attn_mod
+from repro.models.attention import KVCache, init_gqa
+from repro.models.common import dense_init, embed_init, rms_norm, remat_policy_of
+from repro.models.mlp import init_mlp, mlp
+from repro.models.ssm import SSMCache, init_mamba2, mamba2_block, ssm_cache_shape
+from repro.models.transformer import chunked_xent
+
+
+class HybridLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        hc = cfg.hybrid
+        self.num_groups = (cfg.num_layers + hc.period - 1) // hc.period
+
+    def init(self, key):
+        cfg = self.cfg
+        hc = cfg.hybrid
+        dt = jnp.dtype(cfg.dtype)
+        ks = jax.random.split(key, 6)
+        shared = {
+            "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+            "attn": init_gqa(ks[0], cfg, num_heads=hc.shared_num_heads,
+                             num_kv_heads=hc.shared_num_kv_heads,
+                             head_dim=cfg.d_model // hc.shared_num_heads),
+            "mlp": init_mlp(ks[1], cfg, d_ff=hc.shared_d_ff),
+        }
+        mamba = jax.vmap(lambda k: {
+            "ln": jnp.ones((cfg.d_model,), jnp.float32),
+            "m": init_mamba2(k, cfg)})(
+                jax.random.split(ks[2], cfg.num_layers))
+        return {
+            "embed": embed_init(ks[3], cfg.vocab_size, cfg.d_model, dt),
+            "lm_head": dense_init(ks[4], cfg.d_model, cfg.vocab_size, dt),
+            "shared": shared,
+            "mamba": mamba,
+            "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+
+    def _shared_attn(self, params, x, positions, cache, cache_index):
+        cfg = self.cfg
+        hc = cfg.hybrid
+        p = params["shared"]
+        a, new_cache = attn_mod.gqa_attention(
+            p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
+            positions=positions, cache=cache, cache_index=cache_index,
+            num_heads=hc.shared_num_heads,
+            num_kv_heads=hc.shared_num_kv_heads,
+            head_dim=cfg.d_model // hc.shared_num_heads)
+        x = x + a
+        f = mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg,
+                mlp_type="swiglu")
+        return x + f, new_cache
+
+    def forward(self, params, tokens, *, caches=None, cache_index=0,
+                training=False):
+        cfg = self.cfg
+        hc = cfg.hybrid
+        x = params["embed"][tokens]
+        b, s, _ = x.shape
+        positions = jnp.arange(s)[None, :] + cache_index
+        attn_caches, ssm_caches = (caches if caches is not None
+                                   else (None, None))
+
+        from repro.parallel.act_sharding import shard_hidden
+
+        def mamba_body(carry, xs):
+            h = carry
+            p_i, cache_i = xs
+            h = shard_hidden(h)
+            y, new_cache = mamba2_block(
+                p_i["m"], rms_norm(h, p_i["ln"], cfg.norm_eps), cfg,
+                cache=cache_i)
+            return shard_hidden(h + y), new_cache
+
+        if training and cfg.remat:
+            mamba_body = jax.checkpoint(
+                mamba_body, policy=remat_policy_of(cfg))
+
+        new_attn_caches, new_ssm_caches = [], []
+        layer0 = 0
+        for g in range(self.num_groups):
+            ac = attn_caches[g] if attn_caches is not None else None
+            x, nac = self._shared_attn(params, x, positions, ac, cache_index)
+            new_attn_caches.append(nac)
+            n_in_group = min(hc.period, cfg.num_layers - layer0)
+            p_g = jax.tree.map(lambda a: a[layer0:layer0 + n_in_group],
+                               params["mamba"])
+            sc = (jax.tree.map(lambda a: a[layer0:layer0 + n_in_group],
+                               ssm_caches)
+                  if ssm_caches is not None else None)
+            if not cfg.scan_layers:
+                ncs = []
+                for i in range(n_in_group):
+                    p_i = jax.tree.map(lambda a: a[i], p_g)
+                    c_i = (jax.tree.map(lambda a: a[i], sc)
+                           if sc is not None else None)
+                    x, nc = mamba_body(x, (p_i, c_i))
+                    ncs.append(nc)
+                nsc = (jax.tree.map(lambda *xs: jnp.stack(xs, 0), *ncs)
+                       if sc is not None else None)
+            else:
+                x, nsc = jax.lax.scan(mamba_body, x, (p_g, sc))
+            new_ssm_caches.append(nsc)
+            layer0 += n_in_group
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        if caches is not None:
+            new_caches = (new_attn_caches,
+                          jax.tree.map(lambda *xs: jnp.concatenate(xs, 0),
+                                       *new_ssm_caches))
+        else:
+            new_caches = None
+        return x, new_caches
+
+    def loss(self, params, batch):
+        hidden, _ = self.forward(params, batch["tokens"], training=True)
+        xent = chunked_xent(hidden, params["lm_head"], batch["labels"],
+                            batch.get("loss_mask"),
+                            unroll=not self.cfg.scan_layers)
+        return xent, {"xent": xent}
+
+    def init_cache(self, batch: int, s_max: int):
+        cfg = self.cfg
+        hc = cfg.hybrid
+        dt = jnp.dtype(cfg.dtype)
+        hd = cfg.d_model // hc.shared_num_heads
+        kv_shape = (batch, s_max, hc.shared_num_kv_heads, hd)
+        attn_caches = [KVCache(jnp.zeros(kv_shape, dt),
+                               jnp.zeros(kv_shape, dt))
+                       for _ in range(self.num_groups)]
+        conv_s, state_s = ssm_cache_shape(cfg, batch)
+        ssm_caches = SSMCache(
+            jnp.zeros((cfg.num_layers,) + conv_s, dt),
+            jnp.zeros((cfg.num_layers,) + state_s, jnp.float32))
+        return (attn_caches, ssm_caches)
+
+    def prefill(self, params, tokens, caches):
+        hidden, new_caches = self.forward(params, tokens, caches=caches,
+                                          cache_index=0)
+        logits = quant_matmul(hidden[:, -1:], params["lm_head"], None)
+        return logits, new_caches
+
+    def decode_step(self, params, token, caches, index):
+        hidden, new_caches = self.forward(params, token, caches=caches,
+                                          cache_index=index)
+        logits = quant_matmul(hidden, params["lm_head"], None)
+        return logits, new_caches

@@ -1,0 +1,32 @@
+"""Feed-forward blocks: SwiGLU (llama family) and GELU (starcoder2/whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layers import quant_matmul
+from repro.models.common import dense_init
+
+
+def init_mlp(key, cfg, d_model=None, d_ff=None, mlp_type=None, dtype=None):
+    d = d_model or cfg.d_model
+    ff = d_ff or cfg.d_ff
+    mt = mlp_type or cfg.mlp_type
+    dt = dtype or jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], d, ff, dt),
+         "w_down": dense_init(ks[1], ff, d, dt)}
+    if mt == "swiglu":
+        p["w_gate"] = dense_init(ks[2], d, ff, dt)
+    return p
+
+
+def mlp(params, x: jax.Array, cfg, mlp_type=None) -> jax.Array:
+    mt = mlp_type or cfg.mlp_type
+    up = quant_matmul(x, params["w_up"], cfg.quant, "mlp")
+    if mt == "swiglu":
+        gate = quant_matmul(x, params["w_gate"], cfg.quant, "mlp")
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    return quant_matmul(h, params["w_down"], cfg.quant, "mlp")

@@ -1,0 +1,109 @@
+"""Token-choice top-k MoE with shared experts (DeepSeek-V2 style).
+
+Dispatch is *group-local* expert-choice over routed tokens: tokens are
+grouped by batch row (training/prefill) or into one group (decode), each
+expert picks its top-``capacity`` tokens per group by router probability,
+the picks are gathered into a (G, E, C, D) buffer, processed by batched
+expert matmuls (EP: experts sharded over ``model``), and scattered back
+weighted by router probs.  All shapes are static (dry-run/SPMD friendly);
+group-locality keeps the top-k off the sharded token axis so no global
+gather materializes.  Capacity overflow drops tokens (standard semantics);
+the shared experts provide the residual path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layers import quant_matmul
+from repro.models.common import dense_init
+
+
+def init_moe(key, cfg):
+    mc = cfg.moe
+    d, ff = cfg.d_model, mc.d_expert
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 7)
+    e = mc.num_experts
+    scale = 1.0 / jnp.sqrt(d)
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        # stacked expert weights: (E, d, ff) / (E, ff, d)
+        "w_gate": (jax.random.normal(ks[1], (e, d, ff)) * scale).astype(dt),
+        "w_up": (jax.random.normal(ks[2], (e, d, ff)) * scale).astype(dt),
+        "w_down": (jax.random.normal(ks[3], (e, ff, d)) *
+                   (1.0 / jnp.sqrt(ff))).astype(dt),
+    }
+    if mc.num_shared:
+        sff = ff * mc.num_shared
+        p["shared"] = {
+            "w_gate": dense_init(ks[4], d, sff, dt),
+            "w_up": dense_init(ks[5], d, sff, dt),
+            "w_down": dense_init(ks[6], sff, d, dt),
+        }
+    return p
+
+
+def _capacity(group_tokens: int, cfg) -> int:
+    mc = cfg.moe
+    cap = int(group_tokens * mc.top_k * mc.capacity_factor / mc.num_experts)
+    return min(group_tokens, max(4, (cap + 3) // 4 * 4))
+
+
+def moe_ffn(params, x: jax.Array, cfg):
+    """x: (B, S, D) -> (out, aux_loss)."""
+    mc = cfg.moe
+    b, s, d = x.shape
+    e = mc.num_experts
+    # group by batch row; decode (s==1) folds the batch into one group so
+    # capacity stays ~top_k/E per token instead of all-experts-per-token
+    if s == 1:
+        xg_in = x.reshape(1, b, d)
+    else:
+        xg_in = x
+    g, n, _ = xg_in.shape
+    cap = _capacity(n, cfg)
+
+    logits = (xg_in.astype(jnp.float32) @ params["router"])     # (G, N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, mc.top_k)               # (G, N, K)
+
+    # Switch-style load-balance aux loss
+    importance = probs.mean((0, 1))                             # (E,)
+    load = jax.nn.one_hot(top_e[..., 0], e, dtype=jnp.float32).mean((0, 1))
+    aux = e * jnp.sum(importance * load) * mc.aux_loss_coef
+
+    # gate[g, n, e] = prob if e in top-k else 0
+    gates = jnp.zeros((g, n, e), jnp.float32).at[
+        jnp.arange(g)[:, None, None], jnp.arange(n)[None, :, None],
+        top_e].set(top_p)
+    # expert-choice among routed tokens: (G, E, C)
+    sel_gate, sel_idx = jax.lax.top_k(gates.transpose(0, 2, 1), cap)
+    valid = (sel_gate > 0.0).astype(jnp.float32)
+
+    def gather_g(xs, idx):                                      # (N,D),(E,C)
+        return xs[idx.reshape(-1)].reshape(e, cap, d)
+
+    xg = jax.vmap(gather_g)(xg_in, sel_idx)                     # (G, E, C, D)
+    xg = xg * valid[..., None].astype(xg.dtype)
+
+    gate_h = jnp.einsum("gecd,edf->gecf", xg, params["w_gate"])
+    up_h = jnp.einsum("gecd,edf->gecf", xg, params["w_up"])
+    h = jax.nn.silu(gate_h) * up_h
+    yg = jnp.einsum("gecf,efd->gecd", h, params["w_down"])      # (G, E, C, D)
+    yg = yg * (sel_gate * valid)[..., None].astype(yg.dtype)
+
+    def scatter_g(ys, idx):                                     # (E,C,D),(E,C)
+        return jnp.zeros((n, d), ys.dtype).at[idx.reshape(-1)].add(
+            ys.reshape(-1, d))
+
+    out = jax.vmap(scatter_g)(yg, sel_idx)                      # (G, N, D)
+    out = out.reshape(b, s, d)
+
+    if mc.num_shared:
+        sp = params["shared"]
+        gate = quant_matmul(x, sp["w_gate"], cfg.quant, "moe")
+        up = quant_matmul(x, sp["w_up"], cfg.quant, "moe")
+        out = out + quant_matmul(jax.nn.silu(gate) * up, sp["w_down"],
+                                 cfg.quant, "moe")
+    return out.astype(x.dtype), aux

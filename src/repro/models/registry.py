@@ -1,0 +1,100 @@
+"""Architecture registry: ``--arch <id>`` -> (config, model, input specs)."""
+from __future__ import annotations
+
+import importlib
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+ARCH_MODULES = {
+    "starcoder2-15b": "repro.configs.starcoder2_15b",
+    "minitron-4b": "repro.configs.minitron_4b",
+    "yi-9b": "repro.configs.yi_9b",
+    "deepseek-67b": "repro.configs.deepseek_67b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "whisper-base": "repro.configs.whisper_base",
+    "zamba2-1.2b": "repro.configs.zamba2_1p2b",
+    "mamba2-1.3b": "repro.configs.mamba2_1p3b",
+    "llava-next-mistral-7b": "repro.configs.llava_next_mistral_7b",
+    "luna-mlp": "repro.configs.luna_mlp",
+}
+
+ARCH_IDS = [a for a in ARCH_MODULES if a != "luna-mlp"]
+
+# archs with sub-quadratic sequence mixing (run the long_500k cell)
+SUBQUADRATIC = {"zamba2-1.2b", "mamba2-1.3b"}
+
+
+def get_config(arch: str, **overrides) -> ModelConfig:
+    cfg = importlib.import_module(ARCH_MODULES[arch]).CONFIG
+    return replace(cfg, **overrides) if overrides else cfg
+
+
+def get_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe"):
+        from repro.models.transformer import TransformerLM
+        return TransformerLM(cfg)
+    if cfg.family == "encdec":
+        from repro.models.encdec import EncDecLM
+        return EncDecLM(cfg)
+    if cfg.family == "hybrid":
+        from repro.models.hybrid import HybridLM
+        return HybridLM(cfg)
+    if cfg.family == "ssm":
+        from repro.models.ssm_lm import SSMLM
+        return SSMLM(cfg)
+    if cfg.family == "vlm":
+        from repro.models.vlm import VLM
+        return VLM(cfg)
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def cell_supported(arch: str, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether this (arch x shape) cell runs, and why not if skipped."""
+    if shape.name == "long_500k" and arch not in SUBQUADRATIC:
+        return False, ("SKIP: pure full-attention arch; 500k decode needs "
+                       "sub-quadratic attention (DESIGN.md section 5)")
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, batch: int | None = None
+                ) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    ``batch`` overrides the global batch (per-device slicing is done by the
+    sharding layer, these are GLOBAL logical shapes).
+    """
+    b = batch or shape.global_batch
+    s = shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    i32 = jnp.int32
+
+    def sds(shp, dtype=i32):
+        return jax.ShapeDtypeStruct(shp, dtype)
+
+    if shape.kind == "train":
+        if cfg.family == "encdec":
+            return {"frames": sds((b, cfg.encdec.enc_seq, cfg.d_model), dt),
+                    "tokens": sds((b, s)), "labels": sds((b, s))}
+        if cfg.family == "vlm":
+            p = cfg.vlm.num_patches
+            return {"patches": sds((b, p, cfg.d_model), dt),
+                    "tokens": sds((b, s - p)), "labels": sds((b, s))}
+        return {"tokens": sds((b, s)), "labels": sds((b, s))}
+
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            return {"frames": sds((b, cfg.encdec.enc_seq, cfg.d_model), dt),
+                    "tokens": sds((b, s))}
+        if cfg.family == "vlm":
+            p = cfg.vlm.num_patches
+            return {"patches": sds((b, p, cfg.d_model), dt),
+                    "tokens": sds((b, s - p))}
+        return {"tokens": sds((b, s))}
+
+    # decode: one new token against an s-long cache
+    return {"token": sds((b, 1)), "index": jax.ShapeDtypeStruct((), i32)}

@@ -1,0 +1,195 @@
+"""Mamba2 (SSD — state-space duality) block, chunked training + step decode.
+
+Chunked SSD (Dao & Gu 2024): within chunks of size Q the output is a masked
+quadratic form (attention-like, MXU friendly); across chunks a compact
+(H, P, N) state is carried by a linear recurrence (lax.scan).  Decode is the
+O(1)-per-token recurrence on (conv_state, ssm_state) — this is what makes the
+``long_500k`` cell tractable for the SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layers import quant_matmul
+from repro.models.common import dense_init
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array   # (B, conv_dim-1, conv_channels)
+    state: jax.Array  # (B, H, P, N)
+
+
+def _dims(cfg):
+    sc = cfg.ssm
+    d_inner = sc.expand * cfg.d_model
+    nheads = d_inner // sc.head_dim
+    conv_ch = d_inner + 2 * sc.num_groups * sc.state_dim
+    return d_inner, nheads, conv_ch
+
+
+def init_mamba2(key, cfg):
+    sc = cfg.ssm
+    d = cfg.d_model
+    d_inner, nheads, conv_ch = _dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    in_dim = 2 * d_inner + 2 * sc.num_groups * sc.state_dim + nheads
+    return {
+        "w_in": dense_init(ks[0], d, in_dim, dt),
+        "conv_w": (jax.random.normal(ks[1], (sc.conv_dim, conv_ch)) * 0.2
+                   ).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(jnp.float32),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "norm_w": jnp.ones((d_inner,), dt),
+        "w_out": dense_init(ks[2], d_inner, d, dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv1d.  x: (B, S, C); w: (K, C).
+
+    Returns (y, new_state) where state holds the last K-1 inputs.
+    """
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)              # (B, S+K-1, C)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(k))
+    new_state = xp[:, -(k - 1):]
+    return jax.nn.silu(y + b[None, None]), new_state
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk: int, unroll: bool = False):
+    """x: (B,S,H,P); dt: (B,S,H); A: (H,) (negative); B/C: (B,S,G,N).
+
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    hg = h // g                                           # heads per group
+
+    # reshape to chunks
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, g, n)
+    Cc = C.reshape(b, nc, chunk, g, n)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def chunk_step(state, inp):
+        """One chunk: intra (quadratic) + inter (from carried state)."""
+        xq, dtq, Bq, Cq = inp            # (B,Q,H,P),(B,Q,H),(B,Q,G,N)x2
+        dA_cum = jnp.cumsum(dtq * A[None, None, :], axis=1)   # (B,Q,H)
+        seg_start = jnp.exp(dA_cum)                           # decay 0..i
+        seg_end = jnp.exp(dA_cum[:, -1:, :] - dA_cum)         # decay i..end
+        chunk_decay = jnp.exp(dA_cum[:, -1, :])               # (B,H)
+        xdt = xq * dtq[..., None]                             # (B,Q,H,P)
+        Bh = jnp.repeat(Bq, hg, axis=2)                       # (B,Q,H,N)
+        Ch = jnp.repeat(Cq, hg, axis=2)
+
+        # intra-chunk: L[q,k] = exp(dA_cum[q]-dA_cum[k]) for q >= k
+        # (mask BEFORE exp: exp at masked q<k positions overflows and
+        #  0 * inf = NaN in the backward pass)
+        rel = dA_cum[:, :, None, :] - dA_cum[:, None, :, :]   # (B,Q,Q,H)
+        L = jnp.exp(jnp.where(causal[None, :, :, None], rel, -1e30))
+        cb = jnp.einsum("bqgn,bkgn->bqkg", Cq, Bq)            # (B,Q,Q,G)
+        cb = jnp.repeat(cb, hg, axis=-1)                      # (B,Q,Q,H)
+        y_intra = jnp.einsum("bqkh,bkhp->bqhp", cb * L, xdt)
+
+        # inter-chunk from carried state
+        y_inter = jnp.einsum("bqh,bqhn,bhpn->bqhp", seg_start, Ch, state)
+
+        new_state = (state * chunk_decay[..., None, None]
+                     + jnp.einsum("bqh,bqhn,bqhp->bhpn", seg_end, Bh, xdt))
+        return new_state, y_intra + y_inter
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    if unroll:   # accounting mode: python loop (exact cost_analysis totals)
+        state, ys = init, []
+        for i in range(nc):
+            state, y_i = chunk_step(
+                state, (xc[:, i], dtc[:, i], Bc[:, i], Cc[:, i]))
+            ys.append(y_i)
+        return jnp.stack(ys, 1).reshape(b, s, h, p), state
+    xs_c = xc.transpose(1, 0, 2, 3, 4)                        # (NC,B,Q,H,P)
+    dt_c = dtc.transpose(1, 0, 2, 3)
+    B_s = Bc.transpose(1, 0, 2, 3, 4)
+    C_s = Cc.transpose(1, 0, 2, 3, 4)
+    final, ys = jax.lax.scan(chunk_step, init, (xs_c, dt_c, B_s, C_s))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    return y, final
+
+
+def mamba2_block(params, x: jax.Array, cfg, cache: SSMCache | None = None):
+    """x: (B, S, D) -> (y, new_cache).  S == 1 uses the decode recurrence."""
+    sc = cfg.ssm
+    d_inner, nheads, conv_ch = _dims(cfg)
+    b, s, _ = x.shape
+    gn = sc.num_groups * sc.state_dim
+
+    zxbcdt = quant_matmul(x, params["w_in"], cfg.quant, "mlp")
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + conv_ch]
+    dt_raw = zxbcdt[..., d_inner + conv_ch:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None])    # (B,S,H)
+    A = -jnp.exp(params["A_log"])                            # (H,) negative
+
+    conv_state = cache.conv if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                 conv_state)
+    xs = xbc[..., :d_inner].reshape(b, s, nheads, sc.head_dim)
+    B_ = xbc[..., d_inner:d_inner + gn].reshape(b, s, sc.num_groups,
+                                                sc.state_dim)
+    C_ = xbc[..., d_inner + gn:].reshape(b, s, sc.num_groups, sc.state_dim)
+
+    if s == 1 and cache is not None:
+        # --- O(1) decode step ---
+        hg = nheads // sc.num_groups
+        dA = jnp.exp(dt[:, 0] * A[None])                     # (B,H)
+        Bh = jnp.repeat(B_[:, 0], hg, axis=1)                # (B,H,N)
+        Ch = jnp.repeat(C_[:, 0], hg, axis=1)
+        xdt = xs[:, 0] * dt[:, 0][..., None]                 # (B,H,P)
+        new_state = (cache.state * dA[..., None, None]
+                     + jnp.einsum("bhn,bhp->bhpn", Bh, xdt).astype(
+                         cache.state.dtype))
+        y = jnp.einsum("bhn,bhpn->bhp", Ch, new_state.astype(jnp.float32))
+        y = y[:, None]                                       # (B,1,H,P)
+        final_state = new_state
+    else:
+        y, final_state = _ssd_chunked(
+            xs.astype(jnp.float32), dt, A, B_.astype(jnp.float32),
+            C_.astype(jnp.float32), min(sc.chunk_size, s),
+            unroll=not cfg.scan_layers)
+        if cache is not None:
+            final_state = final_state.astype(cache.state.dtype)
+
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    # gated RMSNorm (mamba2)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)
+         * params["norm_w"].astype(jnp.float32)).astype(x.dtype)
+    out = quant_matmul(y, params["w_out"], cfg.quant, "mlp")
+    new_cache = None
+    if cache is not None:
+        new_cache = SSMCache(new_conv.astype(cache.conv.dtype), final_state)
+    return out, new_cache
+
+
+def ssm_cache_shape(cfg, batch: int):
+    sc = cfg.ssm
+    d_inner, nheads, conv_ch = _dims(cfg)
+    return ((batch, sc.conv_dim - 1, conv_ch),
+            (batch, nheads, sc.head_dim, sc.state_dim))

@@ -1,0 +1,87 @@
+"""Mamba2 (attention-free) LM: scan over SSD blocks."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layers import quant_matmul
+from repro.models.common import dense_init, embed_init, rms_norm, remat_policy_of
+from repro.models.ssm import SSMCache, init_mamba2, mamba2_block, ssm_cache_shape
+from repro.models.transformer import chunked_xent
+
+
+class SSMLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def init(self, key):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        ks = jax.random.split(key, 3)
+        return {
+            "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dt),
+            "lm_head": dense_init(ks[1], cfg.d_model, cfg.vocab_size, dt),
+            "blocks": jax.vmap(lambda k: {
+                "ln": jnp.ones((cfg.d_model,), jnp.float32),
+                "m": init_mamba2(k, cfg)})(
+                    jax.random.split(ks[2], cfg.num_layers)),
+            "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+
+    def forward(self, params, tokens, *, caches=None, cache_index=0,
+                training=False):
+        cfg = self.cfg
+        from repro.parallel.act_sharding import shard_hidden
+        x = params["embed"][tokens]
+
+        def body(h, xs):
+            p_i, cache_i = xs
+            h = shard_hidden(h)
+            y, new_cache = mamba2_block(
+                p_i["m"], rms_norm(h, p_i["ln"], cfg.norm_eps), cfg,
+                cache=cache_i)
+            return shard_hidden(h + y), new_cache
+
+        if training and cfg.remat:
+            body = jax.checkpoint(
+                body, policy=remat_policy_of(cfg))
+        if not cfg.scan_layers:
+            n = jax.tree.leaves(params["blocks"])[0].shape[0]
+            ncs = []
+            for i in range(n):
+                p_i = jax.tree.map(lambda a: a[i], params["blocks"])
+                c_i = (jax.tree.map(lambda a: a[i], caches)
+                       if caches is not None else None)
+                x, nc = body(x, (p_i, c_i))
+                ncs.append(nc)
+            new_caches = (jax.tree.map(lambda *xs: jnp.stack(xs, 0), *ncs)
+                          if caches is not None else None)
+            return rms_norm(x, params["ln_f"], cfg.norm_eps), new_caches
+        x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+        return rms_norm(x, params["ln_f"], cfg.norm_eps), new_caches
+
+    def loss(self, params, batch):
+        hidden, _ = self.forward(params, batch["tokens"], training=True)
+        xent = chunked_xent(hidden, params["lm_head"], batch["labels"],
+                            batch.get("loss_mask"),
+                            unroll=not self.cfg.scan_layers)
+        return xent, {"xent": xent}
+
+    def init_cache(self, batch: int, s_max: int):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        conv_s, state_s = ssm_cache_shape(cfg, batch)
+        return SSMCache(
+            jnp.zeros((cfg.num_layers,) + conv_s, dt),
+            jnp.zeros((cfg.num_layers,) + state_s, jnp.float32))
+
+    def prefill(self, params, tokens, caches):
+        hidden, new_caches = self.forward(params, tokens, caches=caches)
+        logits = quant_matmul(hidden[:, -1:], params["lm_head"], None)
+        return logits, new_caches
+
+    def decode_step(self, params, token, caches, index):
+        hidden, new_caches = self.forward(params, token, caches=caches,
+                                          cache_index=index)
+        logits = quant_matmul(hidden, params["lm_head"], None)
+        return logits, new_caches

@@ -1,0 +1,58 @@
+"""LLaVA-NeXT-style VLM: stub vision frontend + Mistral-7B text backbone.
+
+Per the assignment the modality frontend is a STUB: ``input_specs()``
+provides precomputed patch embeddings (B, num_patches, d_model) — the anyres
+tiling/CLIP tower are out of scope.  The multimodal sequence is
+[patches; text] and the backbone is the standard decoder-only transformer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import TransformerLM
+
+
+class VLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.backbone = TransformerLM(cfg)
+
+    def init(self, key):
+        return self.backbone.init(key)
+
+    def _merge(self, params, patches, tokens):
+        tok_embeds = params["embed"][tokens]
+        return jnp.concatenate([patches.astype(tok_embeds.dtype), tok_embeds],
+                               axis=1)
+
+    def loss(self, params, batch):
+        """batch: patches (B,P,D), tokens (B,S_text), labels (B,P+S_text),
+        loss_mask zeroing the patch positions."""
+        embeds = self._merge(params, batch["patches"], batch["tokens"])
+        b, s, _ = embeds.shape
+        p = batch["patches"].shape[1]
+        mask = batch.get("loss_mask")
+        if mask is None:
+            mask = jnp.concatenate(
+                [jnp.zeros((b, p), jnp.float32),
+                 jnp.ones((b, s - p), jnp.float32)], axis=1)
+        hidden, aux, _ = self.backbone.forward(params, embeds=embeds,
+                                               training=True)
+        from repro.models.transformer import chunked_xent
+        head = params["lm_head"]
+        xent = chunked_xent(hidden, head, batch["labels"], mask)
+        return xent + aux, {"xent": xent}
+
+    def init_cache(self, batch: int, s_max: int):
+        return self.backbone.init_cache(batch, s_max)
+
+    def prefill(self, params, tokens, caches, *, patches):
+        embeds = self._merge(params, patches, tokens)
+        hidden, _, new_caches = self.backbone.forward(
+            params, embeds=embeds, caches=caches, cache_index=0)
+        logits = self.backbone.logits(params, hidden[:, -1:])
+        return logits, new_caches
+
+    def decode_step(self, params, token, caches, index):
+        return self.backbone.decode_step(params, token, caches, index)

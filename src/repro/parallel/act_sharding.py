@@ -1,0 +1,81 @@
+"""Activation-sharding hints (Megatron-SP style), applied via context.
+
+Models are mesh-agnostic; the step factories activate a context carrying the
+mesh, and models call :func:`shard_hidden` / :func:`shard_heads` at layer
+boundaries.  Outside the context the hints are no-ops (tests, examples).
+
+  hidden (B, S, D): batch over (pod, data), sequence over model (SP) —
+      cuts the remat-carry footprint by the model-axis size and lets XLA
+      place the all-gather/reduce-scatter pair around attention/MLP.
+  per-head (B, S, H, Dh): batch over (pod, data), heads over model (TP).
+
+Every constraint is shape-guarded (axes that don't divide are dropped), so
+decode steps (S=1) and batch-1 cells degrade gracefully.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import batch_axes
+
+_CTX = threading.local()
+
+
+@contextmanager
+def activation_sharding(mesh, *, sequence_parallel: bool = True):
+    prev = getattr(_CTX, "state", None)
+    _CTX.state = (mesh, sequence_parallel)
+    try:
+        yield
+    finally:
+        _CTX.state = prev
+
+
+def _guarded(x, full_axes):
+    mesh, _ = _CTX.state
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    spec = []
+    for dim, ax in zip(x.shape, full_axes):
+        if ax is None:
+            spec.append(None)
+            continue
+        axs = ax if isinstance(ax, tuple) else (ax,)
+        axs = tuple(a for a in axs if a in sizes)
+        prod = 1
+        for a in axs:
+            prod *= sizes[a]
+        spec.append((axs if len(axs) > 1 else axs[0])
+                    if axs and dim % prod == 0 and dim >= prod else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def current_mesh():
+    """The mesh of the active activation-sharding context (None outside)."""
+    state = getattr(_CTX, "state", None)
+    return state[0] if state is not None else None
+
+
+def shard_hidden(x):
+    """(B, S, D) at block boundaries."""
+    state = getattr(_CTX, "state", None)
+    if state is None:
+        return x
+    mesh, sp = state
+    ba = batch_axes(mesh)
+    seq_ax = "model" if sp else None
+    return _guarded(x, (ba, seq_ax, None))
+
+
+def shard_heads(x):
+    """(B, S, H, Dh) inside attention."""
+    state = getattr(_CTX, "state", None)
+    if state is None:
+        return x
+    mesh, _ = _CTX.state
+    ba = batch_axes(mesh)
+    return _guarded(x, (ba, None, "model", None))

@@ -1,0 +1,66 @@
+"""Distributed-optimization collectives.
+
+``int8 all-reduce with error feedback``: the DP gradient all-reduce is the
+dominant inter-pod traffic for data parallelism; quantizing the payload to
+int8 cuts it 4x vs f32 (2x vs bf16).  Error feedback (Seide et al. 2014;
+Karimireddy et al. 2019) accumulates the local quantization residual into
+the next step's gradient so the compression bias vanishes over time.
+
+Two entry points:
+  * :func:`quantized_psum` — inside shard_map: quantize, int32-accumulate
+    psum, dequantize (exact int semantics, 4x less link traffic);
+  * :func:`compress_grads_int8` — pjit-level simulation of the same
+    round-trip (quantize->dequantize) so the training-quality effect is
+    testable without shard_map plumbing; the wire format is the shard_map
+    path.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _q8(x: jax.Array):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def quantized_psum(x: jax.Array, axis_name: str):
+    """int8-payload psum (inside shard_map).  Scales are psum'd in f32 (tiny);
+    payload goes over the wire as int8 -> int32 accumulate."""
+    q, scale = _q8(x.astype(jnp.float32))
+    # max-scale across participants so dequant is consistent
+    gscale = jax.lax.pmax(scale, axis_name)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / gscale),
+                 -127, 127).astype(jnp.int8)
+    acc = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    return acc.astype(jnp.float32) * gscale
+
+
+class ErrorFeedback:
+    """Residual accumulator for compressed gradients (host-side state)."""
+
+    def __init__(self):
+        self.residual = None
+
+    def compress(self, grads):
+        if self.residual is not None:
+            grads = jax.tree.map(jnp.add, grads, self.residual)
+        compressed = jax.tree.map(_roundtrip_q8, grads)
+        self.residual = jax.tree.map(jnp.subtract, grads, compressed)
+        return compressed
+
+
+def _roundtrip_q8(x):
+    x32 = x.astype(jnp.float32)
+    q, scale = _q8(x32)
+    return (q.astype(jnp.float32) * scale).astype(x.dtype)
+
+
+def compress_grads_int8(grads):
+    """Quantize-dequantize every gradient leaf (pjit-level; the all-reduce
+    that follows then carries int8-precision payloads)."""
+    return jax.tree.map(_roundtrip_q8, grads)

@@ -1,0 +1,188 @@
+"""Logical sharding rules: param/batch/cache PartitionSpecs per architecture.
+
+Strategy (DESIGN.md section 6):
+  * params: FSDP over ``data`` on the contraction-side dim + Megatron TP over
+    ``model`` on heads / FFN-hidden / experts / vocab;
+  * batch: sharded over ``(pod, data)``;
+  * KV caches: heads over ``model`` when the KV-head count divides the axis,
+    otherwise the sequence dim goes over ``model`` (ring-style cache);
+  * every rule is shape-guarded: an axis is applied only if it divides the
+    dim, so the same rules serve 512-chip pods and 2-device test meshes.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import batch_axes
+
+# (regex on 'a/b/c' param path) -> spec builder taking ndim
+# Rules are matched in order; first hit wins.  Leading L (scan) axes are
+# handled by padding the spec with None on the left.
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"embed$",                 ("model", "data")),     # (V, D) vocab-parallel
+    (r"lm_head$",               ("data", "model")),     # (D, V)
+    (r"router$",                ("data", None)),        # (D, E)
+    # MoE experts: EP over model on the expert dim
+    (r"moe/w_(gate|up)$",       ("model", "data", None)),   # (E, D, F)
+    (r"moe/w_down$",            ("model", None, "data")),   # (E, F, D)
+    (r"shared/w_(gate|up)$",    ("data", "model")),
+    (r"shared/w_down$",         ("model", "data")),
+    # MLA
+    (r"w_dkv$",                 ("data", None)),
+    (r"w_dq$",                  ("data", None)),
+    (r"w_uq$",                  (None, "model")),
+    (r"w_uk$",                  (None, "model")),
+    (r"w_uv$",                  (None, "model")),
+    # attention (GQA)
+    (r"attn/w[qkv]$",           ("data", "model")),
+    (r"attn/wo$",               ("model", "data")),
+    # dense MLP
+    (r"w_(gate|up)$",           ("data", "model")),
+    (r"w_down$",                ("model", "data")),
+    # mamba2 (inner dims stay unsharded over model; see DESIGN.md)
+    (r"m/w_in$",                ("data", None)),
+    (r"m/w_out$",               (None, "data")),
+    (r"m/conv_[wb]$",           None),                  # replicated
+    (r"(A_log|D|dt_bias|norm_w|ln\w*|ln_f|ln_enc|ln_dec)$", None),
+]
+
+
+def _guard(spec_axes, shape, mesh) -> P:
+    """Drop axes that don't divide the corresponding dim."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for dim, ax in zip(shape, spec_axes):
+        if ax is None:
+            out.append(None)
+            continue
+        axs = ax if isinstance(ax, tuple) else (ax,)
+        axs = tuple(a for a in axs if a in sizes)
+        prod = int(np.prod([sizes[a] for a in axs])) if axs else 1
+        if axs and dim % prod == 0 and dim >= prod:
+            out.append(axs if len(axs) > 1 else axs[0])
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def param_spec(path: str, shape: tuple, mesh) -> P:
+    for pat, axes in _PARAM_RULES:
+        if re.search(pat, path):
+            if axes is None:
+                return P()
+            axes = tuple(axes)
+            # left-pad for stacked (scan) leading axes
+            pad = len(shape) - len(axes)
+            if pad < 0:   # unstacked smaller rank (e.g. per-layer bias)
+                return P()
+            full = (None,) * pad + axes
+            return _guard(full, shape, mesh)
+    return P()  # default: replicated
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_shardings(params_shape: Any, mesh, *, serve_tp: bool = False) -> Any:
+    """Pytree of NamedShardings matching a params(-shape) pytree.
+
+    ``serve_tp``: drop the ``data`` (FSDP) axis — weights replicated across
+    data, sharded over model only.  No per-use weight all-gathers; right for
+    decode when params/model_axis fits HBM (see EXPERIMENTS.md §Perf)."""
+    def one(path, leaf):
+        spec = param_spec(_path_str(path), leaf.shape, mesh)
+        if serve_tp:
+            spec = P(*[None if ax == "data" else ax for ax in spec])
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# batch & cache specs
+# ---------------------------------------------------------------------------
+
+def batch_spec(name: str, shape: tuple, mesh) -> P:
+    ba = batch_axes(mesh)
+    if len(shape) == 0:
+        return P()
+    full = (ba,) + (None,) * (len(shape) - 1)
+    return _guard(full, shape, mesh)
+
+
+def batch_shardings(batch_shape: dict, mesh) -> dict:
+    return {k: NamedSharding(mesh, batch_spec(k, v.shape, mesh))
+            for k, v in batch_shape.items()}
+
+
+def _kv_spec(shape: tuple, mesh, *, mla: bool) -> P:
+    """KV cache: heads over model when divisible, else sequence over model.
+
+    GQA: (.., B, S, Hkv, Dh); MLA compressed: (.., B, S, R) — MLA always
+    shards S over model (the compressed dim R is the whole point of MLA).
+    """
+    ba = batch_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    msize = sizes.get("model", 1)
+    nd = len(shape)
+    if mla:
+        full = (None,) * (nd - 3) + (ba, "model", None)
+    else:
+        hkv = shape[-2]
+        if hkv % msize == 0:
+            full = (None,) * (nd - 4) + (ba, None, "model", None)
+        else:
+            full = (None,) * (nd - 4) + (ba, "model", None, None)
+    return _guard(full, shape, mesh)
+
+
+def cache_shardings(cache_shape: Any, mesh) -> Any:
+    """Walk an ``init_cache``-shaped tree, dispatching on cache node types."""
+    from repro.models.attention import KVCache
+    from repro.models.ssm import SSMCache
+    ba = batch_axes(mesh)
+
+    def walk(node):
+        if isinstance(node, KVCache):
+            # GQA: k/v identical (.., S, Hkv, Dh); MLA: k=(..,S,R), v=(..,S,dr)
+            is_gqa = node.k.ndim >= 4 and node.k.shape == node.v.shape
+            return KVCache(
+                NamedSharding(mesh, _kv_spec(node.k.shape, mesh, mla=not is_gqa)),
+                NamedSharding(mesh, _kv_spec(node.v.shape, mesh, mla=not is_gqa)))
+        if isinstance(node, SSMCache):
+            conv_full = ((None,) * (node.conv.ndim - 3)
+                         + (ba, None, "model"))
+            state_full = ((None,) * (node.state.ndim - 4)
+                          + (ba, "model", None, None))
+            return SSMCache(
+                NamedSharding(mesh, _guard(conv_full, node.conv.shape, mesh)),
+                NamedSharding(mesh, _guard(state_full, node.state.shape, mesh)))
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(x) for x in node)
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        if node is None:
+            return None
+        # bare array (e.g. encoder output threaded through serve state)
+        shp = node.shape
+        full = (ba,) + (None,) * (len(shp) - 1)
+        return NamedSharding(mesh, _guard(full, shp, mesh))
+
+    return walk(cache_shape)
+
+
+def scalar_sharding(mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,154 @@
+"""Sharded decode attention (flash-decode over the model axis).
+
+Problem (measured in the baseline dry-run): GQA KV caches with few KV heads
+(kv=4/8 < model=16) are sequence-sharded, and the decode step's
+``dynamic_update_slice`` at a dynamic index forces SPMD to rematerialize the
+WHOLE cache every layer (the "involuntary full rematerialization" path) —
+the baseline decode cells are collective-bound by TBs of cache traffic.
+
+Fix: run decode attention inside ``shard_map`` over the model axis:
+  * each rank owns a contiguous sequence slice of the cache — the new KV
+    token is written LOCALLY by the one rank that owns slot ``index``;
+  * each rank computes online-softmax partials (m, l, o) over its slice;
+  * ranks combine with one tiny ``psum`` of (B, H, dh+2) stats.
+Per-step collective traffic drops from O(cache) to O(B x H x dh) — the
+flash-decode/ring-attention pattern, expressed as a jax-native shard_map.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import batch_axes
+
+NEG = -1e30
+
+
+def _local_update(cache, new, index, rank, s_shard):
+    """Write ``new`` (B,1,...) into the rank-local slice at global ``index``."""
+    li = index - rank * s_shard
+    in_range = (li >= 0) & (li < s_shard)
+    li_c = jnp.clip(li, 0, s_shard - 1)
+    start = (0, li_c) + (0,) * (cache.ndim - 2)
+    updated = jax.lax.dynamic_update_slice(cache, new.astype(cache.dtype),
+                                           start)
+    return jnp.where(in_range, updated, cache)
+
+
+def sharded_gqa_decode(q, k_cache, v_cache, k_new, v_new, index, mesh,
+                       *, sm_scale: float, grouped_bf16: bool = False):
+    """q: (B,1,H,dh); caches: (B,S,Hkv,dh) seq-sharded over 'model';
+    k_new/v_new: (B,1,Hkv,dh).  Returns (out (B,1,H,dh), k_cache, v_cache).
+
+    ``grouped_bf16``: skip the f32 KV repeat — GQA-grouped einsums on bf16
+    operands with f32 accumulation.  Inside shard_map tensors are local, so
+    the (Hkv, g) grouping carries no SPMD-propagation hazard.
+    """
+    ba = batch_axes(mesh)
+    msize = mesh.shape["model"]
+    s = k_cache.shape[1]
+    s_shard = s // msize
+    h = q.shape[2]
+    hkv = k_cache.shape[2]
+    g = h // hkv
+
+    def per_rank(q, k_c, v_c, k_n, v_n, idx):
+        rank = jax.lax.axis_index("model")
+        k_c = _local_update(k_c, k_n, idx, rank, s_shard)
+        v_c = _local_update(v_c, v_n, idx, rank, s_shard)
+        cols = rank * s_shard + jnp.arange(s_shard)
+        ok = cols[None, None, :] <= idx
+        if grouped_bf16:
+            b = q.shape[0]
+            qg = q[:, 0].reshape(b, hkv, g, q.shape[-1])      # (B,Hkv,g,dh)
+            s_loc = jax.lax.dot_general(                       # (B,Hkv,g,Ss)
+                qg, k_c.swapaxes(1, 2),
+                (((3,), (3,)), ((0, 1), (0, 1))),
+                preferred_element_type=jnp.float32) * sm_scale
+            s_loc = s_loc.reshape(b, h, s_shard)
+        else:
+            kf = jnp.repeat(k_c, g, axis=2).astype(jnp.float32)
+            qf = q[:, 0].astype(jnp.float32)
+            s_loc = jnp.einsum("bhd,bkhd->bhk", qf, kf) * sm_scale
+        s_loc = jnp.where(ok, s_loc, NEG)
+        m_loc = jnp.max(s_loc, axis=-1, keepdims=True)        # (B,H,1)
+        p = jnp.where(ok, jnp.exp(s_loc - m_loc), 0.0)
+        l_loc = jnp.sum(p, axis=-1, keepdims=True)            # (B,H,1)
+        if grouped_bf16:
+            b = q.shape[0]
+            pg = p.reshape(b, hkv, g, s_shard).astype(k_c.dtype)
+            o_loc = jax.lax.dot_general(                       # (B,Hkv,g,dh)
+                pg, v_c.swapaxes(1, 2),
+                (((3,), (2,)), ((0, 1), (0, 1))),
+                preferred_element_type=jnp.float32)
+            o_loc = o_loc.reshape(b, h, -1)
+        else:
+            vf = jnp.repeat(v_c, g, axis=2).astype(jnp.float32)
+            o_loc = jnp.einsum("bhk,bkhd->bhd", p, vf)        # (B,H,dh)
+        # one tiny combine across ranks
+        m = jax.lax.pmax(m_loc, "model")
+        corr = jnp.exp(m_loc - m)
+        l = jax.lax.psum(l_loc * corr, "model")
+        o = jax.lax.psum(o_loc * corr, "model")
+        out = (o / jnp.maximum(l, 1e-30)).astype(q.dtype)[:, None]
+        return out, k_c, v_c
+
+    cache_spec = P(ba, "model", None, None)
+    io_spec = P(ba, None, None, None)
+    out, k_cache, v_cache = shard_map(
+        per_rank, mesh=mesh,
+        in_specs=(io_spec, cache_spec, cache_spec, io_spec, io_spec, P()),
+        out_specs=(io_spec, cache_spec, cache_spec),
+        check_rep=False,
+    )(q, k_cache, v_cache, k_new, v_new, index)
+    return out, k_cache, v_cache
+
+
+def sharded_mla_decode(q_abs, q_rope, c_cache, r_cache, c_new, r_new, index,
+                       mesh, *, sm_scale: float):
+    """MLA absorbed-form decode with the compressed cache seq-sharded.
+
+    q_abs: (B,1,H,R); q_rope: (B,1,H,dr); c_cache: (B,S,R);
+    r_cache: (B,S,dr).  Returns (ctx_c (B,1,H,R), c_cache, r_cache).
+    """
+    ba = batch_axes(mesh)
+    msize = mesh.shape["model"]
+    s = c_cache.shape[1]
+    s_shard = s // msize
+
+    def per_rank(qa, qr, c_c, r_c, c_n, r_n, idx):
+        rank = jax.lax.axis_index("model")
+        c_c = _local_update(c_c, c_n, idx, rank, s_shard)
+        r_c = _local_update(r_c, r_n, idx, rank, s_shard)
+        qa_f = qa[:, 0].astype(jnp.float32)                   # (B,H,R)
+        qr_f = qr[:, 0].astype(jnp.float32)                   # (B,H,dr)
+        cf = c_c.astype(jnp.float32)                          # (B,Ss,R)
+        rf = r_c.astype(jnp.float32)                          # (B,Ss,dr)
+        s_loc = (jnp.einsum("bhr,bkr->bhk", qa_f, cf)
+                 + jnp.einsum("bhd,bkd->bhk", qr_f, rf)) * sm_scale
+        cols = rank * s_shard + jnp.arange(s_shard)
+        ok = cols[None, None, :] <= idx
+        s_loc = jnp.where(ok, s_loc, NEG)
+        m_loc = jnp.max(s_loc, axis=-1, keepdims=True)
+        p = jnp.where(ok, jnp.exp(s_loc - m_loc), 0.0)
+        l_loc = jnp.sum(p, axis=-1, keepdims=True)
+        o_loc = jnp.einsum("bhk,bkr->bhr", p, cf)             # (B,H,R)
+        m = jax.lax.pmax(m_loc, "model")
+        corr = jnp.exp(m_loc - m)
+        l = jax.lax.psum(l_loc * corr, "model")
+        o = jax.lax.psum(o_loc * corr, "model")
+        ctx = (o / jnp.maximum(l, 1e-30)).astype(qa.dtype)[:, None]
+        return ctx, c_c, r_c
+
+    cache_spec = P(ba, "model", None)
+    qspec = P(ba, None, None, None)
+    ctx, c_cache, r_cache = shard_map(
+        per_rank, mesh=mesh,
+        in_specs=(qspec, qspec, cache_spec, cache_spec,
+                  P(ba, None, None), P(ba, None, None), P()),
+        out_specs=(qspec, cache_spec, cache_spec),
+        check_rep=False,
+    )(q_abs, q_rope, c_cache, r_cache, c_new, r_new, index)
+    return ctx, c_cache, r_cache

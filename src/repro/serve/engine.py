@@ -1,0 +1,120 @@
+"""Batched serving engine: prefill + decode with a static request slab.
+
+Continuous-batching-lite: a fixed slab of ``max_batch`` sequence slots; new
+requests prefill into free slots, every decode tick advances all active
+slots one token (static shapes — jit caches exactly two programs).  Serving
+the paper's technique = run with ``--quant luna_*`` so every projection goes
+through the LUNA integer path.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import get_model
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int = 16
+    out: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, cfg, params, *, max_batch: int = 8,
+                 max_seq: int = 256):
+        self.cfg = cfg
+        self.model = get_model(cfg)
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.caches = self.model.init_cache(max_batch, max_seq)
+        self.positions = np.zeros(max_batch, np.int32)
+        self.active: dict[int, Request] = {}
+        self.slots: list[Request | None] = [None] * max_batch
+        self._prefill = jax.jit(self._prefill_impl,
+                                static_argnames=("prompt_len",))
+        self._decode = jax.jit(self.model.decode_step)
+
+    # --- jit bodies -----------------------------------------------------
+    def _prefill_impl(self, params, tokens, caches, prompt_len):
+        return self.model.prefill(params, tokens, caches)
+
+    # --- public API -----------------------------------------------------
+    def submit(self, req: Request) -> bool:
+        """Prefill into a free slot; returns False if the slab is full."""
+        try:
+            slot = self.slots.index(None)
+        except ValueError:
+            return False
+        # single-row prefill (row batching of prefill is a perf follow-up)
+        toks = jnp.asarray(req.prompt, jnp.int32)[None]
+        row_cache = self.model.init_cache(1, self.max_seq)
+        logits, row_cache = self._prefill(self.params, toks, row_cache,
+                                          prompt_len=len(req.prompt))
+        # write the row cache back into the slab at `slot`
+        self.caches = jax.tree.map(
+            lambda slab, row: _write_row(slab, row, slot),
+            self.caches, row_cache)
+        nxt = int(jnp.argmax(logits[0, -1]))
+        req.out.append(nxt)
+        self.positions[slot] = len(req.prompt)
+        self.slots[slot] = req
+        self.active[req.rid] = req
+        return True
+
+    def step(self):
+        """One decode tick for every active slot."""
+        if not self.active:
+            return
+        toks = np.zeros((self.max_batch, 1), np.int32)
+        for s, req in enumerate(self.slots):
+            if req is not None and not req.done:
+                toks[s, 0] = req.out[-1]
+        index = int(self.positions.max())  # static-shape tick position
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(toks), self.caches, jnp.int32(index))
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        for s, req in enumerate(self.slots):
+            if req is None or req.done:
+                continue
+            req.out.append(int(nxt[s]))
+            self.positions[s] += 1
+            if len(req.out) >= req.max_new or \
+                    self.positions[s] >= self.max_seq - 1:
+                req.done = True
+                self.slots[s] = None
+                del self.active[req.rid]
+
+    def serve(self, requests: list[Request], max_ticks: int = 512):
+        pending = list(requests)
+        t0 = time.time()
+        ticks = 0
+        while (pending or self.active) and ticks < max_ticks:
+            while pending and self.submit(pending[0]):
+                pending.pop(0)
+            self.step()
+            ticks += 1
+        return {"wall_s": time.time() - t0, "ticks": ticks,
+                "done": all(r.done for r in requests)}
+
+
+def _write_row(slab: jax.Array, row: jax.Array, slot: int) -> jax.Array:
+    """Write a batch-1 row cache into the slab at ``slot`` (batch axis is the
+    first axis where row is 1 and the slab is wider)."""
+    if slab.shape == row.shape:        # max_batch == 1: row IS the slab
+        return row.astype(slab.dtype)
+    for ax in range(slab.ndim):
+        if row.shape[ax] == 1 and slab.shape[ax] > 1:
+            idx = [0] * slab.ndim
+            idx[ax] = slot
+            return jax.lax.dynamic_update_slice(slab, row.astype(slab.dtype),
+                                                tuple(idx))
+    return slab

@@ -1,0 +1,92 @@
+"""Train/serve step factories with full sharding annotations.
+
+``make_train_step``/``make_serve_step`` return jit'd functions plus the
+in_shardings used — the dry-run lowers exactly these artifacts.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.registry import get_model, input_specs
+from repro.optim.adamw import AdamW, AdamWState
+from repro.parallel import sharding as shd
+
+
+def loss_fn_of(model, cfg):
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+    return loss_fn
+
+
+def make_train_step(cfg, optimizer: AdamW, mesh, *, microbatch: int = 0,
+                    grad_compression: bool = False):
+    """Returns (train_step, shardings dict).
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+    ``microbatch``: if > 0, split the per-step batch into that many
+    accumulation chunks (overlaps the DP gradient reduction of chunk i-1
+    with compute of chunk i under XLA latency hiding).
+    """
+    model = get_model(cfg)
+    loss_fn = loss_fn_of(model, cfg)
+
+    def train_step(params, opt_state, batch):
+        if microbatch > 1:
+            def one(carry, mb):
+                acc, _ = carry
+                (l, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, l), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mbs = jax.tree.map(
+                lambda x: x.reshape((microbatch, -1) + x.shape[1:]), batch)
+            (gsum, last_loss), _ = jax.lax.scan(one, (zero, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / microbatch, gsum)
+            loss, metrics = last_loss, {}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        if grad_compression:
+            from repro.parallel.collectives import compress_grads_int8
+            grads = compress_grads_int8(grads)
+        new_params, new_opt, opt_metrics = optimizer.update(
+            grads, opt_state, params)
+        metrics = dict(metrics or {}, loss=loss, **opt_metrics)
+        return new_params, new_opt, metrics
+
+    return train_step, model
+
+
+def train_shardings(model, cfg, shape, mesh):
+    """(params, opt_state, batch) NamedShardings for the dry-run lowering."""
+    params_shape = jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0)))
+    p_sh = shd.param_shardings(params_shape, mesh)
+    opt_sh = AdamWState(shd.scalar_sharding(mesh), p_sh, p_sh)
+    batch_shape = input_specs(cfg, shape)
+    b_sh = shd.batch_shardings(batch_shape, mesh)
+    return params_shape, p_sh, opt_sh, batch_shape, b_sh
+
+
+def make_serve_step(cfg, mesh, *, kind: str, shape):
+    """Returns model + (prefill | decode) callable for lowering."""
+    model = get_model(cfg)
+    if kind == "prefill":
+        def serve_step(params, batch, caches):
+            kwargs = {k: v for k, v in batch.items()
+                      if k in ("frames", "patches")}
+            return model.prefill(params, batch["tokens"], caches, **kwargs)
+        return model, serve_step
+    # decode: one token against a seq_len cache
+    def serve_step(params, token, caches, index):
+        return model.decode_step(params, token, caches, index)
+    return model, serve_step

@@ -1,0 +1,127 @@
+"""Fault-tolerant training loop: checkpoint/restart, preemption handling,
+straggler detection.
+
+Designed for the restart-based recovery model of 1000+ node fleets:
+  * auto-resume from the latest complete checkpoint on (re)start;
+  * SIGTERM/SIGINT -> synchronous final checkpoint then clean exit
+    (preemption-notice handling);
+  * per-step wall-time watchdog with EMA outlier detection (the straggler
+    signal that triggers drain/replace on a real fleet; here it logs and
+    counts events);
+  * deterministic data stream keyed by step — a restart replays nothing and
+    needs no data-state checkpoint;
+  * elastic: checkpoints restore onto any mesh (device count can change
+    between runs — see checkpoint/ckpt.py).
+"""
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass
+
+import jax
+
+from repro.checkpoint.ckpt import Checkpointer
+from repro.data.synthetic import SyntheticLM
+from repro.models.registry import get_model
+from repro.optim.adamw import AdamW, AdamWState, cosine_schedule
+from repro.parallel import sharding as shd
+from repro.parallel.act_sharding import activation_sharding
+from repro.train.train_step import make_train_step
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    lr: float = 3e-4
+    warmup: int = 10
+    straggler_factor: float = 3.0   # step > factor * EMA -> straggler event
+    microbatch: int = 0
+    grad_compression: bool = False
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg, tcfg: TrainerConfig, mesh):
+        self.cfg, self.tcfg, self.mesh = cfg, tcfg, mesh
+        self.model = get_model(cfg)
+        self.opt = AdamW(lr=tcfg.lr,
+                         schedule=cosine_schedule(tcfg.warmup,
+                                                  tcfg.total_steps))
+        self.ckpt = Checkpointer(tcfg.ckpt_dir)
+        self._stop = False
+        self.straggler_events: list[int] = []
+
+    def _install_signals(self):
+        def handler(signum, frame):
+            self._stop = True      # finish current step, checkpoint, exit
+        signal.signal(signal.SIGTERM, handler)
+        signal.signal(signal.SIGINT, handler)
+
+    def run(self, data: SyntheticLM, *, install_signals: bool = True):
+        tcfg = self.tcfg
+        if install_signals:
+            self._install_signals()
+
+        params_shape = jax.eval_shape(
+            lambda: self.model.init(jax.random.PRNGKey(tcfg.seed)))
+        opt_shape = jax.eval_shape(self.opt.init, params_shape)
+        p_sh = shd.param_shardings(params_shape, self.mesh)
+        opt_sh = AdamWState(shd.scalar_sharding(self.mesh), p_sh, p_sh)
+        state_shape = {"params": params_shape, "opt": opt_shape}
+        state_sh = {"params": p_sh, "opt": opt_sh}
+
+        step_fn, _ = make_train_step(
+            self.cfg, self.opt, self.mesh, microbatch=tcfg.microbatch,
+            grad_compression=tcfg.grad_compression)
+
+        start = self.ckpt.latest_step()
+        with self.mesh, activation_sharding(self.mesh):
+            if start is None:
+                params = jax.jit(self.model.init, out_shardings=p_sh)(
+                    jax.random.PRNGKey(tcfg.seed))
+                opt_state = jax.jit(self.opt.init, out_shardings=opt_sh)(
+                    params)
+                start = 0
+            else:
+                state = self.ckpt.restore(start, state_shape, state_sh)
+                params, opt_state = state["params"], state["opt"]
+                opt_state = AdamWState(*opt_state) \
+                    if not isinstance(opt_state, AdamWState) else opt_state
+                print(f"[trainer] resumed from step {start}", flush=True)
+
+            jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+            ema = None
+            history = []
+            for step in range(start, tcfg.total_steps):
+                t0 = time.time()
+                batch = data.batch(step)
+                params, opt_state, metrics = jit_step(params, opt_state,
+                                                      batch)
+                loss = float(metrics["loss"])
+                dt = time.time() - t0
+                if ema is not None and dt > tcfg.straggler_factor * ema:
+                    self.straggler_events.append(step)
+                    print(f"[watchdog] step {step} took {dt:.2f}s "
+                          f"(EMA {ema:.2f}s) — straggler/retry signal",
+                          flush=True)
+                ema = dt if ema is None else 0.9 * ema + 0.1 * dt
+                history.append(loss)
+                if step % tcfg.log_every == 0:
+                    print(f"[trainer] step {step} loss {loss:.4f} "
+                          f"({dt*1e3:.0f} ms)", flush=True)
+                done = step + 1
+                if (done % tcfg.ckpt_every == 0 or self._stop
+                        or done == tcfg.total_steps):
+                    self.ckpt.save(done, {"params": params,
+                                          "opt": opt_state},
+                                   blocking=self._stop)
+                if self._stop:
+                    print(f"[trainer] preemption: checkpointed at {done}",
+                          flush=True)
+                    break
+            self.ckpt.wait()
+        return params, history

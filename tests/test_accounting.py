@@ -1,0 +1,79 @@
+"""Probe-extrapolation solver: exact on synthetic component costs."""
+import numpy as np
+import pytest
+
+from repro.launch.accounting import METRICS, extrapolate, probe_plan
+from repro.models.registry import get_config
+
+
+def _fake_rec(flops, bytes_, coll):
+    return {
+        "hlo_flops": flops, "hlo_bytes": bytes_, "collective_bytes": coll,
+        "collective_breakdown": {
+            "all-gather": coll * 0.5, "all-reduce": coll * 0.5,
+            "reduce-scatter": 0, "all-to-all": 0, "collective-permute": 0},
+    }
+
+
+def test_extrapolate_dense_exact():
+    cfg = get_config("yi-9b")
+    probes, full = probe_plan(cfg, "train")
+    base, layer = 7.0, 3.0
+    recs = [_fake_rec(base + layer * c["layer"], 2 * (base + layer * c["layer"]),
+                      10 * c["layer"]) for _, c in probes]
+    out = extrapolate(recs, probes, full)
+    L = cfg.num_layers
+    assert out["hlo_flops"] == pytest.approx(base + layer * L)
+    assert out["collective_bytes"] == pytest.approx(10 * L)
+    assert out["probe_residual"] < 1e-9
+
+
+def test_extrapolate_hybrid_three_components():
+    cfg = get_config("zamba2-1.2b")
+    probes, full = probe_plan(cfg, "train")
+    base, attn, mamba = 5.0, 11.0, 2.0
+
+    def f(c):
+        return base * c["base"] + attn * c["attn"] + mamba * c["mamba"]
+
+    recs = [_fake_rec(f(c), f(c), f(c)) for _, c in probes]
+    out = extrapolate(recs, probes, full)
+    expect = base + attn * full["attn"] + mamba * full["mamba"]
+    assert full["attn"] == 7 and full["mamba"] == 38
+    assert out["hlo_flops"] == pytest.approx(expect)
+
+
+def test_extrapolate_encdec_components():
+    cfg = get_config("whisper-base")
+    probes, full = probe_plan(cfg, "train")
+    base, enc, dec = 1.0, 4.0, 9.0
+
+    def f(c):
+        return base + enc * c.get("enc", 0) + dec * c.get("dec", 0)
+
+    recs = [_fake_rec(f(c), f(c), 0) for _, c in probes]
+    out = extrapolate(recs, probes, full)
+    assert out["hlo_flops"] == pytest.approx(base + 6 * enc + 6 * dec)
+
+
+def test_probe_plan_moe_counts():
+    cfg = get_config("deepseek-v2-236b")
+    probes, full = probe_plan(cfg, "train")
+    # first_dense=1 lives in 'base'; full stack has 59 MoE layers
+    assert full == {"base": 1, "moe": 59}
+    assert probes[0][1] == {"base": 1, "moe": 1}
+
+
+def test_collective_parser():
+    from repro.launch.roofline import collective_bytes
+    hlo = """
+      %ag = bf16[16,512,128]{2,1,0} all-gather(%x), replica_groups={}
+      %ar.1 = f32[1024]{0} all-reduce(%y), to_apply=%sum
+      %cp = u8[64,64]{1,0} collective-permute(%z)
+      %dot = f32[8,8]{1,0} dot(%a, %b)
+    """
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 16 * 512 * 128 * 2
+    assert out["all-reduce"] == 1024 * 4
+    assert out["collective-permute"] == 64 * 64
+    assert out["total"] == (16 * 512 * 128 * 2 + 4096 + 4096)

@@ -1,0 +1,76 @@
+"""Hardware cost model vs the paper's stated numbers (Tables I/II, Figs 15-18)."""
+import pytest
+
+from repro.core import cost_model as cm
+from repro.core.luna import LunaMode
+
+
+def test_table1_conventional_lut():
+    """Paper Table I: SRAMs and muxes for 3b..8b conventional LUT."""
+    expected = {3: (48, 42), 4: (128, 120), 5: (320, 310),
+                6: (768, 756), 7: (1792, 1778), 8: (4096, 4080)}
+    for bits, (srams, muxes) in expected.items():
+        c = cm.conventional_cost(bits)
+        assert (c.srams, c.muxes) == (srams, muxes), bits
+
+
+def test_fig2_dc_counts():
+    """Paper Fig 2 totals: 24 SRAMs, 36 muxes, 3 HA, 3 FA for 4b D&C."""
+    c = cm.dc_cost(4)
+    assert (c.srams, c.muxes, c.has, c.fas) == (24, 36, 3, 3)
+
+
+@pytest.mark.parametrize("bits,expected", [
+    (4, (10, 36, 3, 3)),
+    (8, (36, 120, 11, 21)),
+    (16, (136, 432, 31, 105)),
+])
+def test_table2_optimized_dc(bits, expected):
+    """Paper Table II: optimized D&C component counts for 4/8/16 b."""
+    c = cm.opt_dc_cost(bits)
+    assert (c.srams, c.muxes, c.has, c.fas) == expected
+
+
+def test_fig9_approx_dc():
+    """Paper Fig 9: ApproxD&C needs 10 SRAMs, 18 muxes, no adders."""
+    c = cm.approx_dc_cost(4)
+    assert (c.srams, c.muxes, c.has, c.fas) == (10, 18, 0, 0)
+
+
+def test_fig10_approx_dc2():
+    """Paper Fig 10: 12 SRAMs, 18 muxes, 4 HA, 1 FA."""
+    c = cm.approx_dc2_cost(4)
+    assert (c.srams, c.muxes, c.has, c.fas) == (12, 18, 4, 1)
+
+
+def test_fig15_energy_share():
+    """Paper: multiplier = 47.96 fJ = ~0.0276 % of 173.8 pJ/bit -> <0.1 %."""
+    rep = cm.energy_report()
+    assert rep["multiplier_share"] == pytest.approx(2.76e-4, rel=0.02)
+    assert rep["multiplier_share"] < 1e-3              # abstract: <0.1 %
+
+
+def test_fig16_area_ratio():
+    """Paper abstract: optimized D&C ~3.7x less area than conventional."""
+    rep = cm.area_report(4)
+    ratio = rep["opt_dc"]["area_vs_conventional"]
+    assert 3.3 <= ratio <= 4.1, ratio
+    # approx variants are even smaller
+    assert rep["approx_dc"]["area_vs_conventional"] > ratio
+
+
+def test_fig18_array_overhead():
+    """Paper: 4 LUNA units on the 8x8 array = 32 % area overhead."""
+    rep = cm.array_overhead(4)
+    assert rep["overhead_fraction"] == pytest.approx(0.32, abs=0.01)
+    assert rep["unit_area_um2"] == 287.0
+    assert rep["total_area_um2"] == 3650.0
+
+
+def test_storage_scaling_beats_conventional():
+    """The D&C scalability claim: storage linear vs exponential in bits."""
+    for bits in (4, 8, 16):
+        assert cm.opt_dc_cost(bits).srams < cm.conventional_cost(bits).srams
+    # 16b: 2M -> 136 cells
+    assert cm.conventional_cost(16).srams == 2097152
+    assert cm.opt_dc_cost(16).srams == 136

@@ -1,0 +1,122 @@
+"""Core LUNA arithmetic: exhaustive + property tests against the paper."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import luna
+from repro.core.luna import LunaMode
+
+
+# ---------------------------------------------------------------------------
+# Exact modes are bit-exact multipliers (exhaustive over all 4b pairs)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", [LunaMode.CONVENTIONAL, LunaMode.DC,
+                                  LunaMode.OPT_DC])
+def test_exact_modes_exhaustive_4b(mode):
+    w, y = np.meshgrid(np.arange(16), np.arange(16), indexing="ij")
+    got = luna.luna_product(jnp.asarray(w), jnp.asarray(y), bits=4, mode=mode)
+    np.testing.assert_array_equal(np.asarray(got), w * y)
+
+
+@pytest.mark.parametrize("bits", [4, 6, 8])
+@given(data=st.data())
+@settings(max_examples=30, deadline=None)
+def test_exact_dc_property(bits, data):
+    hi = (1 << bits) - 1
+    w = data.draw(st.integers(0, hi))
+    y = data.draw(st.integers(0, hi))
+    got = luna.luna_product(jnp.int32(w), jnp.int32(y), bits=bits,
+                            mode=LunaMode.DC)
+    assert int(got) == w * y
+
+
+# ---------------------------------------------------------------------------
+# Approx modes: the paper's exact error semantics
+# ---------------------------------------------------------------------------
+
+def test_approx_dc_error_range_fig8():
+    err = luna.error_table(LunaMode.APPROX_DC, bits=4)
+    assert err.min() == 0 and err.max() == 45          # paper Fig 8: [0, 45]
+    # error = W * y_lo exactly
+    w, y = np.meshgrid(np.arange(16), np.arange(16), indexing="ij")
+    np.testing.assert_array_equal(err, w * (y & 3))
+
+
+def test_approx_dc2_error_range_fig12():
+    err = luna.error_table(LunaMode.APPROX_DC2, bits=4)
+    assert err.min() == -15 and err.max() == 30        # paper Fig 12: [-15, 30]
+    w, y = np.meshgrid(np.arange(16), np.arange(16), indexing="ij")
+    np.testing.assert_array_equal(err, w * ((y & 3) - 1))
+
+
+def test_fig5_lsb_distribution():
+    vals, probs, max_val = luna.lsb_product_distribution()
+    assert max_val == 45
+    assert probs[0] == pytest.approx(19 / 64)          # paper: 0.296
+    assert probs.sum() == pytest.approx(1.0)
+
+
+def test_fig5_impossible_values():
+    """Paper: 17,19,23,25,29,31,32,34,35,37,38,40,41,43,44,46..63 unreachable."""
+    imp = set(luna.impossible_lsb_products())
+    paper = {17, 19, 23, 25, 29, 31, 32, 34, 35, 37, 38, 40, 41, 43, 44}
+    paper |= set(range(46, 64))
+    assert paper <= imp
+    # all reachable ones really are products
+    reachable = {w * y for w in range(16) for y in range(4)}
+    assert imp == set(range(64)) - reachable
+
+
+def test_fig6_hamming_optimal_is_zero():
+    cands, hd = luna.hamming_distance_profile()
+    assert int(np.argmin(hd)) == 0                     # paper: argmin at 0
+    assert hd[0] == pytest.approx(0.275, abs=0.005)    # paper: 0.275
+
+
+# ---------------------------------------------------------------------------
+# Matmul semantics == summed element-wise semantics (the D&C commutes with
+# contraction) — hypothesis over shapes and bit widths.
+# ---------------------------------------------------------------------------
+
+@given(m=st.integers(1, 5), k=st.integers(1, 9), n=st.integers(1, 5),
+       mode=st.sampled_from(list(LunaMode)), bits=st.sampled_from([4, 8]),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_luna_matmul_matches_elementwise(m, k, n, mode, bits, seed):
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, 1 << bits, (m, k))
+    w = rng.integers(0, 1 << bits, (k, n))
+    got = np.asarray(luna.luna_matmul(jnp.asarray(y), jnp.asarray(w),
+                                      bits=bits, mode=mode))
+    ref = np.zeros((m, n), np.int64)
+    for i in range(m):
+        for j in range(n):
+            prods = luna.luna_product(jnp.asarray(w[:, j]), jnp.asarray(y[i]),
+                                      bits=bits, mode=mode)
+            ref[i, j] = int(np.asarray(prods).sum())
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_approx_dc2_colsum_identity():
+    """ApproxD&C2's LSB term == colsum(W): the 'free bias' TPU mapping."""
+    rng = np.random.default_rng(0)
+    y = jnp.asarray(rng.integers(0, 16, (7, 33)))
+    w = jnp.asarray(rng.integers(0, 16, (33, 5)))
+    a2 = luna.luna_matmul(y, w, mode=LunaMode.APPROX_DC2)
+    a0 = luna.luna_matmul(y, w, mode=LunaMode.APPROX_DC)
+    np.testing.assert_array_equal(np.asarray(a2 - a0),
+                                  np.broadcast_to(np.asarray(w).sum(0), a2.shape))
+
+
+# ---------------------------------------------------------------------------
+# Optimized table storage (Fig 3): 10 stored cells reconstruct the table
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("w", range(16))
+def test_optimized_table_reconstruction(w):
+    st_ = luna.optimized_table_storage(w, bits=4)
+    assert st_["num_cells"] == 10                      # paper Fig 3
+    assert luna.optimized_table_reconstruct(st_) == [0, w, 2 * w, 3 * w]
