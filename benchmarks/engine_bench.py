@@ -1,0 +1,168 @@
+"""Serving-engine benchmarks: decode throughput vs slab width, and batched
+(bucketed) prefill vs per-row prefill.
+
+Prints the orchestrator's ``name,us_per_call,derived`` CSV rows.  Timings on
+CPU are correctness-level; the derived column carries the quantities that
+transfer (tokens/s, per-token cost, speedup ratios).
+
+  PYTHONPATH=src python benchmarks/engine_bench.py --quant luna_approx
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(
+    __file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+DEF_BATCHES = (1, 8, 32)
+
+
+def _build(quant: str, max_batch: int, max_seq: int):
+    import jax
+
+    from repro.core.layers import QuantConfig
+    from repro.models.registry import get_config, get_model
+    from repro.serve.engine import Engine
+
+    cfg = get_config("yi-9b").reduced()
+    if quant != "bf16":
+        from dataclasses import replace
+        cfg = replace(cfg, quant=QuantConfig(mode=quant))
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, Engine(cfg, params, max_batch=max_batch, max_seq=max_seq)
+
+
+def decode_throughput(quant: str = "bf16", batches=DEF_BATCHES,
+                      ticks: int = 24, max_seq: int = 128) -> dict:
+    """Steady-state decode tokens/s with every slot occupied, per slab width.
+
+    Fills the slab, burns warm-up ticks (jit compile + cache), then times
+    ``ticks`` decode steps.
+    """
+    import numpy as np
+
+    from repro.serve.engine import Request
+
+    rows = {}
+    for mb in batches:
+        cfg, eng = _build(quant, mb, max_seq)
+        rng = np.random.default_rng(0)
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(1, cfg.vocab_size, 6).tolist(),
+                        max_new=max_seq)       # never finishes mid-bench
+                for i in range(mb)]
+        for i, r in enumerate(reqs):
+            assert eng.submit(r), i
+        for _ in range(3):                      # warm-up (compile) ticks
+            eng.step()
+        eng.metrics.decode_s = 0.0
+        eng.metrics.decode_tokens = 0
+        t0 = time.perf_counter()
+        for _ in range(ticks):
+            eng.step()
+        wall = time.perf_counter() - t0
+        toks = eng.metrics.decode_tokens
+        tok_s = toks / max(wall, 1e-9)
+        us = wall / ticks * 1e6
+        rows[mb] = tok_s
+        print(f"engine_decode_b{mb},{us:.0f},"
+              f"tok_s={tok_s:.1f};quant={quant};ticks={ticks}")
+    if 1 in rows:
+        for mb in batches:
+            if mb != 1:
+                print(f"engine_decode_scaling_b{mb},0,"
+                      f"tok_s_ratio_vs_b1={rows[mb] / rows[1]:.2f}")
+    return rows
+
+
+def prefill_batched_vs_per_row(quant: str = "bf16", batch: int = 8,
+                               prompt_len: int = 24, max_seq: int = 128,
+                               iters: int = 3) -> dict:
+    """One bucketed prefill call + slab scatter vs per-row prefill calls.
+
+    Same prompts, same slab; per-row mode submits each request alone (the
+    seed engine's strategy), batched mode admits them as one bucket.
+    """
+    import numpy as np
+
+    from repro.serve.engine import Request
+
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(1, 500, prompt_len).tolist()
+               for _ in range(batch)]
+
+    def _run(batched: bool) -> float:
+        cfg, eng = _build(quant, batch, max_seq)
+        vocab = cfg.vocab_size
+        ps = [[t % vocab for t in p] for p in prompts]
+        best = float("inf")
+        for it in range(iters + 1):             # iter 0 = compile warm-up
+            eng.slots = [None] * batch
+            eng.active.clear()
+            t0 = time.perf_counter()
+            if batched:
+                reqs = [Request(rid=it * batch + i, prompt=p, max_new=4)
+                        for i, p in enumerate(ps)]
+                eng._admit(reqs, list(range(batch)))
+            else:
+                for i, p in enumerate(ps):
+                    assert eng.submit(
+                        Request(rid=it * batch + i, prompt=p, max_new=4))
+            wall = time.perf_counter() - t0
+            if it > 0:
+                best = min(best, wall)
+        return best
+
+    per_row = _run(batched=False)
+    batched = _run(batched=True)
+    speedup = per_row / max(batched, 1e-9)
+    print(f"engine_prefill_per_row_b{batch},{per_row * 1e6:.0f},"
+          f"len={prompt_len};quant={quant}")
+    print(f"engine_prefill_batched_b{batch},{batched * 1e6:.0f},"
+          f"speedup_vs_per_row={speedup:.2f}")
+    return {"per_row_s": per_row, "batched_s": batched, "speedup": speedup}
+
+
+def smoke() -> None:
+    """Tiny CI-sized run: decode at b in (1, 4) + prefill comparison at 4."""
+    decode_throughput(batches=(1, 4), ticks=6, max_seq=64)
+    prefill_batched_vs_per_row(batch=4, prompt_len=12, max_seq=64, iters=1)
+
+
+ALL = [decode_throughput, prefill_batched_vs_per_row]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quant", default="bf16",
+                    help="bf16 or a luna_* mode (e.g. luna_approx)")
+    ap.add_argument("--batches", type=int, nargs="+",
+                    default=list(DEF_BATCHES))
+    ap.add_argument("--ticks", type=int, default=24)
+    ap.add_argument("--prefill-batch", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    if args.smoke:
+        smoke()
+        return
+    ok = True
+    decode_throughput(args.quant, tuple(args.batches), args.ticks)
+    res = prefill_batched_vs_per_row(args.quant, args.prefill_batch)
+    if res["speedup"] <= 1.0:
+        print(f"engine_prefill_regression,FAIL,"
+              f"batched_slower_than_per_row={res['speedup']:.2f}")
+        ok = False
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

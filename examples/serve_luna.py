@@ -2,10 +2,12 @@
 
 The paper's CiM setting is inference: weights stationary in SRAM, inputs
 streamed through the LUT multipliers.  The serving engine is the system
-analogue — weights resident, requests streamed through prefill/decode with
-every projection in the chosen LUNA mode.
+analogue — weights resident, requests streamed through batched prefill and
+mixed-depth continuous-batching decode with every projection in the chosen
+LUNA mode.
 
-Run:  PYTHONPATH=src python examples/serve_luna.py --quant luna_approx2
+Run:  PYTHONPATH=src python examples/serve_luna.py --quant luna_approx2 \
+          --sampling top_k --top-k 20
 """
 import argparse
 import os
@@ -18,6 +20,7 @@ import numpy as np  # noqa: E402
 from repro.core.layers import QuantConfig  # noqa: E402
 from repro.models.registry import get_config, get_model  # noqa: E402
 from repro.serve.engine import Engine, Request  # noqa: E402
+from repro.serve.sampling import SamplingConfig  # noqa: E402
 
 
 def main():
@@ -25,21 +28,37 @@ def main():
     ap.add_argument("--quant", default="luna_approx")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--sampling", default="greedy",
+                    choices=["greedy", "temperature", "top_k"])
+    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--top-k", type=int, default=40)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config("yi-9b").reduced(quant=QuantConfig(mode=args.quant))
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = Engine(cfg, params, max_batch=4, max_seq=96)
+    sampling = SamplingConfig(mode=args.sampling,
+                              temperature=args.temperature, top_k=args.top_k)
+    engine = Engine(cfg, params, max_batch=4, max_seq=96,
+                    sampling=sampling, seed=args.seed)
 
     rng = np.random.default_rng(0)
+    # deliberately mixed prompt lengths: the engine buckets them for prefill
+    # and decodes them at per-slot positions on one slab
     reqs = [Request(rid=i,
-                    prompt=rng.integers(1, cfg.vocab_size, 5).tolist(),
+                    prompt=rng.integers(
+                        1, cfg.vocab_size, int(rng.integers(3, 9))).tolist(),
                     max_new=args.max_new)
             for i in range(args.requests)]
     stats = engine.serve(reqs)
     print(f"served {len(reqs)} requests in {stats['ticks']} ticks "
-          f"({stats['wall_s']:.1f}s wall, quant={args.quant})")
+          f"({stats['wall_s']:.1f}s wall, quant={args.quant}, "
+          f"sampling={args.sampling})")
+    print(f"  prefill {stats['prefill_tok_s']:.0f} tok/s over "
+          f"{stats['prefill_calls']} bucket calls | decode "
+          f"{stats['decode_tok_s']:.0f} tok/s | slot occupancy "
+          f"{stats['occupancy']:.0%}")
     for r in reqs[:3]:
         print(f"  req {r.rid}: prompt {r.prompt} -> {r.out}")
     assert stats["done"]

@@ -9,7 +9,6 @@ Run:  PYTHONPATH=src python examples/train_lm.py --steps 200
 """
 import argparse
 import os
-import sys
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
 

@@ -19,7 +19,7 @@ Training uses the STE wrapper (forward = bit-exact integer path).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp

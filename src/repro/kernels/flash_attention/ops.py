@@ -1,10 +1,8 @@
 """Public attention entry point: picks flash kernel vs jnp by context."""
 from __future__ import annotations
 
-import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref

@@ -10,7 +10,6 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.luna import LunaMode
 from repro.core.quant import calibrate, quantize
 from repro.kernels.luna_mm.luna_mm import luna_mm
 

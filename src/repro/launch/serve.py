@@ -1,12 +1,11 @@
 """Serving CLI: batched requests against any assigned arch (reduced or full).
 
   PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --reduced \
-      --quant luna_approx --requests 8
+      --quant luna_approx --requests 8 --sampling top_k --top-k 40
 """
 from __future__ import annotations
 
 import argparse
-import os
 
 
 def main():
@@ -18,6 +17,14 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--prefill-bucket", type=int, default=16,
+                    help="prompt lengths are padded up to multiples of this "
+                         "and prefilled one jit call per bucket")
+    ap.add_argument("--sampling", default="greedy",
+                    choices=["greedy", "temperature", "top_k"])
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--top-k", type=int, default=40)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     import jax
@@ -26,6 +33,7 @@ def main():
     from repro.core.layers import QuantConfig
     from repro.models.registry import get_config, get_model
     from repro.serve.engine import Engine, Request
+    from repro.serve.sampling import SamplingConfig
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -36,8 +44,12 @@ def main():
 
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    sampling = SamplingConfig(mode=args.sampling,
+                              temperature=args.temperature,
+                              top_k=args.top_k)
     engine = Engine(cfg, params, max_batch=args.max_batch,
-                    max_seq=args.max_seq)
+                    max_seq=args.max_seq, sampling=sampling,
+                    seed=args.seed, prefill_bucket=args.prefill_bucket)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(1, cfg.vocab_size, 6).tolist(),
@@ -47,6 +59,12 @@ def main():
     tok_count = sum(len(r.out) for r in reqs)
     print(f"{tok_count} tokens over {len(reqs)} requests: "
           f"{stats['wall_s']:.2f}s wall, done={stats['done']}")
+    print(f"  prefill: {stats['prefill_tokens']} tok in "
+          f"{stats['prefill_s']:.2f}s ({stats['prefill_tok_s']:.0f} tok/s, "
+          f"{stats['prefill_calls']} bucket calls)")
+    print(f"  decode:  {stats['decode_tokens']} tok in "
+          f"{stats['decode_s']:.2f}s ({stats['decode_tok_s']:.0f} tok/s, "
+          f"occupancy {stats['occupancy']:.0%})")
 
 
 if __name__ == "__main__":

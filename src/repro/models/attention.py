@@ -27,7 +27,29 @@ class KVCache(NamedTuple):
 # Scaled dot-product attention with GQA broadcast, three impls
 # ---------------------------------------------------------------------------
 
+def _per_row(q_offset, kv_len) -> bool:
+    """True when offsets are per-row (B,) arrays (mixed-depth batched decode)."""
+    return any(v is not None and getattr(v, "ndim", 0) == 1
+               for v in (q_offset, kv_len))
+
+
 def _bias(sq: int, sk: int, q_offset, causal: bool, kv_len=None) -> jax.Array:
+    """Additive mask bias.
+
+    Scalar offsets -> (sq, sk), broadcast over batch and heads.  Per-row
+    (B,)-shaped ``q_offset``/``kv_len`` (continuous batching: every slab row
+    decodes at its own depth) -> (B, 1, sq, sk).
+    """
+    if _per_row(q_offset, kv_len):
+        off = jnp.asarray(q_offset if q_offset is not None else 0)
+        rows = jnp.arange(sq)[None, :, None] + off.reshape(-1, 1, 1)
+        cols = jnp.arange(sk)[None, None, :]
+        ok = jnp.ones((rows.shape[0], sq, sk), bool)
+        if causal:
+            ok &= rows >= cols
+        if kv_len is not None:
+            ok &= cols < jnp.asarray(kv_len).reshape(-1, 1, 1)
+        return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)[:, None]
     rows = jnp.arange(sq)[:, None] + (q_offset if q_offset is not None else 0)
     cols = jnp.arange(sk)[None, :]
     ok = jnp.ones((sq, sk), bool)
@@ -69,7 +91,9 @@ def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
     v = shard_heads(v)
     q = shard_heads(q)
     def _mask(s, sq_c, sk_c, off):
-        if not fused_mask:   # baseline: scale-mul then broadcast-bias add
+        if not fused_mask or _per_row(off, kv_len):
+            # baseline: scale-mul then broadcast-bias add (also the only
+            # path that supports per-row offsets)
             return s * scale + _bias(sq_c, sk_c, off, causal, kv_len)
         # fused scale+mask: one where() instead of mul + broadcast-bias-add
         rows = jnp.arange(sq_c)[:, None] + off
@@ -198,10 +222,20 @@ def gqa_attention(params, x: jax.Array, cfg, *, positions: jax.Array,
                 out = out.reshape(b, s, h * dh)
                 return (quant_matmul(out, params["wo"], cfg.quant, "attn"),
                         KVCache(k_all, v_all))
-        k_all = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
-                                             (0, cache_index, 0, 0))
-        v_all = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
-                                             (0, cache_index, 0, 0))
+        if getattr(cache_index, "ndim", 0) == 1:
+            # per-row decode positions: every slab row writes its new KV at
+            # its own depth (single batched scatter, static shapes)
+            assert s == 1, "per-row cache_index is decode-only (S == 1)"
+            rows = jnp.arange(b)
+            k_all = cache.k.at[rows, cache_index].set(
+                k[:, 0].astype(cache.k.dtype))
+            v_all = cache.v.at[rows, cache_index].set(
+                v[:, 0].astype(cache.v.dtype))
+        else:
+            k_all = jax.lax.dynamic_update_slice(
+                cache.k, k.astype(cache.k.dtype), (0, cache_index, 0, 0))
+            v_all = jax.lax.dynamic_update_slice(
+                cache.v, v.astype(cache.v.dtype), (0, cache_index, 0, 0))
         new_cache = KVCache(k_all, v_all)
         k, v = k_all, v_all
         kv_len = cache_index + s
@@ -288,10 +322,18 @@ def mla_attention(params, x: jax.Array, cfg, *, positions: jax.Array,
             return (quant_matmul(ctx, params["wo"], cfg.quant, "attn"),
                     KVCache(c_all, r_all))
     if cache is not None:
-        c_all = jax.lax.dynamic_update_slice(
-            cache.k, c_kv.astype(cache.k.dtype), (0, cache_index, 0))
-        r_all = jax.lax.dynamic_update_slice(
-            cache.v, k_rope.astype(cache.v.dtype), (0, cache_index, 0))
+        if getattr(cache_index, "ndim", 0) == 1:
+            assert s == 1, "per-row cache_index is decode-only (S == 1)"
+            rows = jnp.arange(b)
+            c_all = cache.k.at[rows, cache_index].set(
+                c_kv[:, 0].astype(cache.k.dtype))
+            r_all = cache.v.at[rows, cache_index].set(
+                k_rope[:, 0].astype(cache.v.dtype))
+        else:
+            c_all = jax.lax.dynamic_update_slice(
+                cache.k, c_kv.astype(cache.k.dtype), (0, cache_index, 0))
+            r_all = jax.lax.dynamic_update_slice(
+                cache.v, k_rope.astype(cache.v.dtype), (0, cache_index, 0))
         new_cache = KVCache(c_all, r_all)
         c_kv, k_rope = c_all, r_all
         kv_len = cache_index + s
@@ -310,7 +352,10 @@ def mla_attention(params, x: jax.Array, cfg, *, positions: jax.Array,
         s_c = jnp.einsum("bqhr,bkr->bhqk", qa, c_f)
         s_r = jnp.einsum("bqhd,bkd->bhqk", qr, r_f)
         scores = (s_c + s_r) * inv_sqrt
-        scores = scores + _bias(qa.shape[1], sk, off, True, kv_len)[None, None]
+        bias = _bias(qa.shape[1], sk, off, True, kv_len)
+        if bias.ndim == 2:            # scalar offsets: broadcast over (B, H)
+            bias = bias[None, None]
+        scores = scores + bias
         p = jax.nn.softmax(scores, axis=-1)
         return jnp.einsum("bhqk,bkr->bqhr", p, c_f)       # (B,cq,H,R)
 

@@ -32,6 +32,26 @@ def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
     return ((x * jax.lax.rsqrt(var + eps)) * weight.astype(jnp.float32)).astype(dt)
 
 
+def token_positions(s: int, cache_index) -> jax.Array:
+    """Absolute positions of ``s`` new tokens appended at ``cache_index``.
+
+    ``cache_index`` is a scalar (shared depth: prefill / uniform decode) or a
+    (B,) int32 array (continuous batching: each slab row at its own depth).
+    Returns (1, S) or (B, S), broadcastable against (B, S) activations.
+    """
+    idx = cache_index
+    if getattr(idx, "ndim", 0) == 1:
+        return idx[:, None] + jnp.arange(s)[None, :]
+    return jnp.arange(s)[None, :] + idx
+
+
+def gather_last(hidden: jax.Array, last_pos) -> jax.Array:
+    """hidden: (B, S, D) -> (B, 1, D) at per-row ``last_pos`` (B,) (the last
+    REAL token of each row in a right-padded prefill batch)."""
+    idx = jnp.asarray(last_pos, jnp.int32).reshape(-1, 1, 1)
+    return jnp.take_along_axis(hidden, idx, axis=1)
+
+
 def rope_freqs(head_dim: int, theta: float) -> jax.Array:
     return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
                             / head_dim))

@@ -6,7 +6,6 @@ precomputed frame embeddings (B, enc_seq, d_model).  The transformer backbone
 """
 from __future__ import annotations
 
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -14,7 +13,8 @@ import jax.numpy as jnp
 from repro.core.layers import quant_matmul
 from repro.models import attention as attn_mod
 from repro.models.attention import KVCache, init_gqa
-from repro.models.common import dense_init, embed_init, rms_norm, remat_policy_of
+from repro.models.common import (dense_init, embed_init, gather_last,
+                                 rms_norm, remat_policy_of, token_positions)
 from repro.models.mlp import init_mlp, mlp
 from repro.models.transformer import chunked_xent
 
@@ -91,7 +91,7 @@ class EncDecLM:
         cfg = self.cfg
         x = params["embed"][tokens]
         b, s, _ = x.shape
-        positions = jnp.arange(s)[None, :] + cache_index
+        positions = token_positions(s, cache_index)
 
         def body(carry, xs):
             h = carry
@@ -144,14 +144,17 @@ class EncDecLM:
         shape = (cfg.num_layers, batch, s_max, hkv, dh)
         return KVCache(jnp.zeros(shape, dt), jnp.zeros(shape, dt))
 
-    def prefill(self, params, tokens, caches, *, frames):
+    def prefill(self, params, tokens, caches, *, frames, last_pos=None):
         enc_out = self.encode(params, frames)
         hidden, new_caches = self.decode(params, tokens, enc_out,
                                          caches=caches, cache_index=0)
-        logits = quant_matmul(hidden[:, -1:], params["lm_head"], None)
+        last = (hidden[:, -1:] if last_pos is None
+                else gather_last(hidden, last_pos))
+        logits = quant_matmul(last, params["lm_head"], None)
         return logits, (new_caches, enc_out)
 
     def decode_step(self, params, token, state, index):
+        """``index``: scalar or (B,) per-row decoder positions."""
         caches, enc_out = state
         hidden, new_caches = self.decode(params, token, enc_out,
                                          caches=caches, cache_index=index)

@@ -9,7 +9,6 @@ sharded over the model axis.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +16,8 @@ import jax.numpy as jnp
 from repro.core.layers import quant_matmul
 from repro.models import attention as attn_mod
 from repro.models.attention import KVCache, init_gqa
-from repro.models.common import dense_init, embed_init, rms_norm, remat_policy_of
+from repro.models.common import (dense_init, embed_init, gather_last,
+                                 rms_norm, remat_policy_of, token_positions)
 from repro.models.mlp import init_mlp, mlp
 from repro.models.ssm import SSMCache, init_mamba2, mamba2_block, ssm_cache_shape
 from repro.models.transformer import chunked_xent
@@ -75,7 +75,7 @@ class HybridLM:
         hc = cfg.hybrid
         x = params["embed"][tokens]
         b, s, _ = x.shape
-        positions = jnp.arange(s)[None, :] + cache_index
+        positions = token_positions(s, cache_index)
         attn_caches, ssm_caches = (caches if caches is not None
                                    else (None, None))
 
@@ -151,13 +151,17 @@ class HybridLM:
             jnp.zeros((cfg.num_layers,) + state_s, jnp.float32))
         return (attn_caches, ssm_caches)
 
-    def prefill(self, params, tokens, caches):
+    def prefill(self, params, tokens, caches, *, last_pos=None):
         hidden, new_caches = self.forward(params, tokens, caches=caches,
                                           cache_index=0)
-        logits = quant_matmul(hidden[:, -1:], params["lm_head"], None)
+        last = (hidden[:, -1:] if last_pos is None
+                else gather_last(hidden, last_pos))
+        logits = quant_matmul(last, params["lm_head"], None)
         return logits, new_caches
 
     def decode_step(self, params, token, caches, index):
+        """``index``: scalar or (B,) per-row positions (attention caches
+        honor per-row depths; the SSM state recurrence is position-free)."""
         hidden, new_caches = self.forward(params, token, caches=caches,
                                           cache_index=index)
         logits = quant_matmul(hidden, params["lm_head"], None)

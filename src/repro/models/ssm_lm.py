@@ -5,7 +5,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.layers import quant_matmul
-from repro.models.common import dense_init, embed_init, rms_norm, remat_policy_of
+from repro.models.common import (dense_init, embed_init, gather_last,
+                                 rms_norm, remat_policy_of)
 from repro.models.ssm import SSMCache, init_mamba2, mamba2_block, ssm_cache_shape
 from repro.models.transformer import chunked_xent
 
@@ -75,12 +76,16 @@ class SSMLM:
             jnp.zeros((cfg.num_layers,) + conv_s, dt),
             jnp.zeros((cfg.num_layers,) + state_s, jnp.float32))
 
-    def prefill(self, params, tokens, caches):
+    def prefill(self, params, tokens, caches, *, last_pos=None):
         hidden, new_caches = self.forward(params, tokens, caches=caches)
-        logits = quant_matmul(hidden[:, -1:], params["lm_head"], None)
+        last = (hidden[:, -1:] if last_pos is None
+                else gather_last(hidden, last_pos))
+        logits = quant_matmul(last, params["lm_head"], None)
         return logits, new_caches
 
     def decode_step(self, params, token, caches, index):
+        """``index``: scalar or (B,) — unused by the position-free SSM
+        recurrence, accepted for a uniform engine-facing signature."""
         hidden, new_caches = self.forward(params, token, caches=caches,
                                           cache_index=index)
         logits = quant_matmul(hidden, params["lm_head"], None)

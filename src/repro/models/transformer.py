@@ -12,8 +12,7 @@ Design notes for scale:
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, NamedTuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +21,8 @@ from repro.core.layers import quant_matmul
 from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod
 from repro.models.attention import KVCache, init_gqa, init_mla
-from repro.models.common import dense_init, embed_init, rms_norm, remat_policy_of
+from repro.models.common import (dense_init, embed_init, gather_last,
+                                 rms_norm, remat_policy_of, token_positions)
 from repro.models.mlp import init_mlp, mlp
 
 
@@ -143,7 +143,7 @@ class TransformerLM:
             embeds = params["embed"][tokens]
         x = embeds
         b, s, _ = x.shape
-        positions = jnp.arange(s)[None, :] + cache_index
+        positions = token_positions(s, cache_index)
         moe = cfg.moe
         n_dense = moe.first_dense if moe else 0
         dense_caches, scan_caches = None, None
@@ -208,14 +208,20 @@ class TransformerLM:
             one_c)
         return (dense_caches, scan_caches)
 
-    def prefill(self, params, tokens, caches, *, embeds=None):
+    def prefill(self, params, tokens, caches, *, embeds=None, last_pos=None):
+        """``last_pos``: optional (B,) per-row index of the last REAL token
+        (right-padded batched prefill); default = the final column."""
         hidden, _, new_caches = self.forward(
             params, tokens, embeds=embeds, caches=caches, cache_index=0)
-        logits = self.logits(params, hidden[:, -1:])
+        last = (hidden[:, -1:] if last_pos is None
+                else gather_last(hidden, last_pos))
+        logits = self.logits(params, last)
         return logits, new_caches
 
     def decode_step(self, params, token, caches, index):
-        """token: (B, 1) int32; index: scalar int32 current position."""
+        """token: (B, 1) int32; index: scalar int32 position shared by all
+        rows, or a (B,) int32 array of per-row positions (mixed-depth
+        continuous batching)."""
         hidden, _, new_caches = self.forward(
             params, token, caches=caches, cache_index=index)
         return self.logits(params, hidden), new_caches

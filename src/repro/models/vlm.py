@@ -7,7 +7,6 @@ tiling/CLIP tower are out of scope.  The multimodal sequence is
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.models.transformer import TransformerLM
@@ -47,12 +46,16 @@ class VLM:
     def init_cache(self, batch: int, s_max: int):
         return self.backbone.init_cache(batch, s_max)
 
-    def prefill(self, params, tokens, caches, *, patches):
+    def prefill(self, params, tokens, caches, *, patches, last_pos=None):
+        from repro.models.common import gather_last
         embeds = self._merge(params, patches, tokens)
         hidden, _, new_caches = self.backbone.forward(
             params, embeds=embeds, caches=caches, cache_index=0)
-        logits = self.backbone.logits(params, hidden[:, -1:])
+        last = (hidden[:, -1:] if last_pos is None
+                else gather_last(hidden, last_pos))
+        logits = self.backbone.logits(params, last)
         return logits, new_caches
 
     def decode_step(self, params, token, caches, index):
+        """``index``: scalar or (B,) per-row positions."""
         return self.backbone.decode_step(params, token, caches, index)

@@ -13,7 +13,6 @@ activation moves s -> s+1 via ``collective_permute``.  Implemented with
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

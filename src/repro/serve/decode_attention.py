@@ -27,7 +27,22 @@ NEG = -1e30
 
 
 def _local_update(cache, new, index, rank, s_shard):
-    """Write ``new`` (B,1,...) into the rank-local slice at global ``index``."""
+    """Write ``new`` (B,1,...) into the rank-local slice at global ``index``.
+
+    ``index`` may be a scalar (uniform decode depth) or a (B,) array
+    (continuous batching: each row writes at its own depth).
+    """
+    idx = jnp.asarray(index)
+    if idx.ndim == 1:
+        b = cache.shape[0]
+        li = idx - rank * s_shard                      # (B,) local offsets
+        in_range = (li >= 0) & (li < s_shard)
+        li_c = jnp.clip(li, 0, s_shard - 1)
+        rows = jnp.arange(b)
+        cur = cache[rows, li_c]
+        keep = in_range.reshape((-1,) + (1,) * (cur.ndim - 1))
+        return cache.at[rows, li_c].set(
+            jnp.where(keep, new[:, 0].astype(cache.dtype), cur))
     li = index - rank * s_shard
     in_range = (li >= 0) & (li < s_shard)
     li_c = jnp.clip(li, 0, s_shard - 1)
@@ -35,6 +50,14 @@ def _local_update(cache, new, index, rank, s_shard):
     updated = jax.lax.dynamic_update_slice(cache, new.astype(cache.dtype),
                                            start)
     return jnp.where(in_range, updated, cache)
+
+
+def _valid_cols(cols, idx):
+    """(B?, 1, Ss) bool mask of cache columns at or before ``idx``."""
+    idx = jnp.asarray(idx)
+    if idx.ndim == 1:
+        return cols[None, None, :] <= idx[:, None, None]
+    return cols[None, None, :] <= idx
 
 
 def sharded_gqa_decode(q, k_cache, v_cache, k_new, v_new, index, mesh,
@@ -59,7 +82,7 @@ def sharded_gqa_decode(q, k_cache, v_cache, k_new, v_new, index, mesh,
         k_c = _local_update(k_c, k_n, idx, rank, s_shard)
         v_c = _local_update(v_c, v_n, idx, rank, s_shard)
         cols = rank * s_shard + jnp.arange(s_shard)
-        ok = cols[None, None, :] <= idx
+        ok = _valid_cols(cols, idx)
         if grouped_bf16:
             b = q.shape[0]
             qg = q[:, 0].reshape(b, hkv, g, q.shape[-1])      # (B,Hkv,g,dh)
@@ -97,9 +120,12 @@ def sharded_gqa_decode(q, k_cache, v_cache, k_new, v_new, index, mesh,
 
     cache_spec = P(ba, "model", None, None)
     io_spec = P(ba, None, None, None)
+    # a (B,) per-row index is batch-sharded with the tensors it indexes
+    idx_spec = P(ba) if getattr(index, "ndim", 0) == 1 else P()
     out, k_cache, v_cache = shard_map(
         per_rank, mesh=mesh,
-        in_specs=(io_spec, cache_spec, cache_spec, io_spec, io_spec, P()),
+        in_specs=(io_spec, cache_spec, cache_spec, io_spec, io_spec,
+                  idx_spec),
         out_specs=(io_spec, cache_spec, cache_spec),
         check_rep=False,
     )(q, k_cache, v_cache, k_new, v_new, index)
@@ -129,7 +155,7 @@ def sharded_mla_decode(q_abs, q_rope, c_cache, r_cache, c_new, r_new, index,
         s_loc = (jnp.einsum("bhr,bkr->bhk", qa_f, cf)
                  + jnp.einsum("bhd,bkd->bhk", qr_f, rf)) * sm_scale
         cols = rank * s_shard + jnp.arange(s_shard)
-        ok = cols[None, None, :] <= idx
+        ok = _valid_cols(cols, idx)
         s_loc = jnp.where(ok, s_loc, NEG)
         m_loc = jnp.max(s_loc, axis=-1, keepdims=True)
         p = jnp.where(ok, jnp.exp(s_loc - m_loc), 0.0)
@@ -144,10 +170,11 @@ def sharded_mla_decode(q_abs, q_rope, c_cache, r_cache, c_new, r_new, index,
 
     cache_spec = P(ba, "model", None)
     qspec = P(ba, None, None, None)
+    idx_spec = P(ba) if getattr(index, "ndim", 0) == 1 else P()
     ctx, c_cache, r_cache = shard_map(
         per_rank, mesh=mesh,
         in_specs=(qspec, qspec, cache_spec, cache_spec,
-                  P(ba, None, None), P(ba, None, None), P()),
+                  P(ba, None, None), P(ba, None, None), idx_spec),
         out_specs=(qspec, cache_spec, cache_spec),
         check_rep=False,
     )(q_abs, q_rope, c_cache, r_cache, c_new, r_new, index)

@@ -1,21 +1,28 @@
-"""Batched serving engine: prefill + decode with a static request slab.
+"""Continuous-batching serving engine: batched prefill + mixed-depth decode.
 
-Continuous-batching-lite: a fixed slab of ``max_batch`` sequence slots; new
-requests prefill into free slots, every decode tick advances all active
-slots one token (static shapes — jit caches exactly two programs).  Serving
-the paper's technique = run with ``--quant luna_*`` so every projection goes
-through the LUNA integer path.
+A fixed slab of ``max_batch`` sequence slots.  New requests are bucketed by
+padded prompt length and prefilled in ONE jit call per bucket (rows are
+written into the slab caches with a single batched scatter); every decode
+tick advances all active slots one token **at their own position** — a
+``(max_batch,)`` int32 position array is threaded through
+``model.decode_step`` so rows of different depths attend over exactly their
+own prefix (static shapes: jit caches one decode program plus one prefill
+program per bucket shape).
+
+Serving the paper's technique = run with ``--quant luna_*`` so every
+projection goes through the LUNA integer path.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, fields, replace
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.registry import get_model
+from repro.serve.sampling import SamplingConfig, sample
 
 
 @dataclass
@@ -27,61 +34,193 @@ class Request:
     done: bool = False
 
 
+@dataclass
+class EngineMetrics:
+    """Wall-clock + token accounting split by phase."""
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    prefill_tokens: int = 0      # prompt tokens pushed through prefill
+    decode_tokens: int = 0       # tokens emitted by decode ticks
+    prefill_calls: int = 0
+    ticks: int = 0
+    occupancy_sum: int = 0       # sum over ticks of active slots
+
+    def since(self, start: "EngineMetrics") -> "EngineMetrics":
+        """Per-call delta: these counters minus a ``start`` snapshot (the
+        engine-lifetime metrics keep accumulating across serve() calls)."""
+        return EngineMetrics(**{
+            f.name: getattr(self, f.name) - getattr(start, f.name)
+            for f in fields(self)})
+
+    def summary(self, max_batch: int) -> dict:
+        d = {
+            "prefill_s": self.prefill_s,
+            "decode_s": self.decode_s,
+            "prefill_tokens": self.prefill_tokens,
+            "decode_tokens": self.decode_tokens,
+            "prefill_calls": self.prefill_calls,
+            "ticks": self.ticks,
+            "prefill_tok_s": self.prefill_tokens / max(self.prefill_s, 1e-9),
+            "decode_tok_s": self.decode_tokens / max(self.decode_s, 1e-9),
+            "occupancy": (self.occupancy_sum / (self.ticks * max_batch)
+                          if self.ticks else 0.0),
+        }
+        return d
+
+
+# families whose caches tolerate right-padded prefill rows (attention masks
+# the pad columns away); recurrent-state families (ssm/hybrid) fold every
+# input token into their state, so they are only batched at EXACT lengths
+PADDED_PREFILL_FAMILIES = ("dense", "moe")
+
+
 class Engine:
     def __init__(self, cfg, params, *, max_batch: int = 8,
-                 max_seq: int = 256):
+                 max_seq: int = 256, sampling: SamplingConfig | None = None,
+                 seed: int = 0, prefill_bucket: int = 16):
+        if cfg.family in ("encdec", "vlm"):
+            raise ValueError(
+                f"family {cfg.family!r} needs modality inputs the text-only "
+                "engine does not carry")
+        if prefill_bucket < 1:
+            raise ValueError(f"prefill_bucket must be >= 1, "
+                             f"got {prefill_bucket}")
         self.cfg = cfg
         self.model = get_model(cfg)
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
+        self.sampling = sampling or SamplingConfig()
+        self.prefill_bucket = prefill_bucket
+        self._pad_ok = cfg.family in PADDED_PREFILL_FAMILIES
         self.caches = self.model.init_cache(max_batch, max_seq)
+        self._batch_axes = self._find_batch_axes()
         self.positions = np.zeros(max_batch, np.int32)
+        self.key = jax.random.PRNGKey(seed)
         self.active: dict[int, Request] = {}
         self.slots: list[Request | None] = [None] * max_batch
-        self._prefill = jax.jit(self._prefill_impl,
-                                static_argnames=("prompt_len",))
-        self._decode = jax.jit(self.model.decode_step)
+        self.metrics = EngineMetrics()
+        self._prefill = jax.jit(self._prefill_impl)
+        self._decode = jax.jit(self._decode_impl)
+
+    # --- cache-slab layout ----------------------------------------------
+    def _find_batch_axes(self):
+        """Per-leaf batch axis of the cache tree, found structurally by
+        diffing the shapes of two differently-sized cache trees (cache
+        layouts are family-specific: KV slabs are (B, S, ...), scanned
+        layers stack an (L,) axis in front)."""
+        a = self.model.init_cache(2, 4)
+        b = self.model.init_cache(3, 4)
+
+        def one(la, lb):
+            diff = [ax for ax, (da, db) in enumerate(zip(la.shape, lb.shape))
+                    if da != db]
+            if len(diff) != 1:
+                raise ValueError(
+                    f"ambiguous batch axis for cache leaf {la.shape}")
+            return diff[0]
+
+        return jax.tree.map(one, a, b)
+
+    def _scatter_rows(self, slab_tree, rows_tree, slots: jax.Array):
+        """Write ``k`` freshly-prefilled cache rows into the slab at
+        ``slots`` — one batched scatter per leaf, inside jit."""
+        def one(slab, rows, ax):
+            idx = (slice(None),) * ax + (slots,)
+            return slab.at[idx].set(rows.astype(slab.dtype))
+
+        return jax.tree.map(one, slab_tree, rows_tree, self._batch_axes)
 
     # --- jit bodies -----------------------------------------------------
-    def _prefill_impl(self, params, tokens, caches, prompt_len):
-        return self.model.prefill(params, tokens, caches)
+    def _prefill_impl(self, params, tokens, slab, last_pos, slots, key):
+        """Prefill a (k, L) token bucket against fresh (k, max_seq) caches,
+        scatter the rows into the slab, sample each row's first token."""
+        k = tokens.shape[0]
+        fresh = self.model.init_cache(k, self.max_seq)
+        logits, rows = self.model.prefill(params, tokens, fresh,
+                                          last_pos=last_pos)
+        new_slab = self._scatter_rows(slab, rows, slots)
+        toks = sample(logits[:, 0], key, self.sampling)
+        return toks, new_slab
+
+    def _decode_impl(self, params, tokens, caches, positions, key):
+        logits, new_caches = self.model.decode_step(
+            params, tokens, caches, positions)
+        toks = sample(logits[:, 0], key, self.sampling)
+        return toks, new_caches
 
     # --- public API -----------------------------------------------------
     def submit(self, req: Request) -> bool:
-        """Prefill into a free slot; returns False if the slab is full."""
-        try:
-            slot = self.slots.index(None)
-        except ValueError:
+        """Prefill one request into a free slot; False if the slab is full."""
+        free = [s for s, r in enumerate(self.slots) if r is None]
+        if not free:
             return False
-        # single-row prefill (row batching of prefill is a perf follow-up)
-        toks = jnp.asarray(req.prompt, jnp.int32)[None]
-        row_cache = self.model.init_cache(1, self.max_seq)
-        logits, row_cache = self._prefill(self.params, toks, row_cache,
-                                          prompt_len=len(req.prompt))
-        # write the row cache back into the slab at `slot`
-        self.caches = jax.tree.map(
-            lambda slab, row: _write_row(slab, row, slot),
-            self.caches, row_cache)
-        nxt = int(jnp.argmax(logits[0, -1]))
-        req.out.append(nxt)
-        self.positions[slot] = len(req.prompt)
-        self.slots[slot] = req
-        self.active[req.rid] = req
+        self._admit([req], free[:1])
         return True
 
+    def _bucket_len(self, n: int) -> int:
+        if not self._pad_ok:
+            return n                       # exact-length grouping only
+        bl = -(-n // self.prefill_bucket) * self.prefill_bucket
+        return min(bl, self.max_seq)
+
+    def _admit(self, reqs: list[Request], slots: list[int]):
+        """Prefill ``reqs`` into ``slots`` — one jit call per length bucket,
+        one cache scatter per bucket (no per-row update round-trips)."""
+        assert len(reqs) == len(slots)
+        buckets: dict[int, list[int]] = {}
+        for i, r in enumerate(reqs):
+            if not (0 < len(r.prompt) <= self.max_seq - 1):
+                raise ValueError(
+                    f"request {r.rid}: prompt length {len(r.prompt)} not in "
+                    f"[1, max_seq-1={self.max_seq - 1}]")
+            buckets.setdefault(self._bucket_len(len(r.prompt)), []).append(i)
+        for blen, idxs in buckets.items():
+            k = len(idxs)
+            toks = np.zeros((k, blen), np.int32)
+            last = np.zeros(k, np.int32)
+            for j, i in enumerate(idxs):
+                p = reqs[i].prompt
+                toks[j, :len(p)] = p
+                last[j] = len(p) - 1
+            self.key, sub = jax.random.split(self.key)
+            t0 = time.perf_counter()
+            nxt, self.caches = self._prefill(
+                self.params, jnp.asarray(toks), self.caches,
+                jnp.asarray(last), jnp.asarray([slots[i] for i in idxs]),
+                sub)
+            nxt = np.asarray(nxt)          # sync for honest wall-clock
+            self.metrics.prefill_s += time.perf_counter() - t0
+            self.metrics.prefill_calls += 1
+            for j, i in enumerate(idxs):
+                req, slot = reqs[i], slots[i]
+                req.out.append(int(nxt[j]))
+                self.positions[slot] = len(req.prompt)
+                self.slots[slot] = req
+                self.active[req.rid] = req
+                self.metrics.prefill_tokens += len(req.prompt)
+
     def step(self):
-        """One decode tick for every active slot."""
+        """One decode tick: every active slot advances one token at its own
+        position (free/done rows compute masked garbage that is ignored)."""
         if not self.active:
             return
         toks = np.zeros((self.max_batch, 1), np.int32)
+        n_active = 0
         for s, req in enumerate(self.slots):
             if req is not None and not req.done:
                 toks[s, 0] = req.out[-1]
-        index = int(self.positions.max())  # static-shape tick position
-        logits, self.caches = self._decode(
-            self.params, jnp.asarray(toks), self.caches, jnp.int32(index))
-        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+                n_active += 1
+        self.key, sub = jax.random.split(self.key)
+        t0 = time.perf_counter()
+        nxt, self.caches = self._decode(
+            self.params, jnp.asarray(toks), self.caches,
+            jnp.asarray(self.positions), sub)
+        nxt = np.asarray(nxt)
+        self.metrics.decode_s += time.perf_counter() - t0
+        self.metrics.ticks += 1
+        self.metrics.occupancy_sum += n_active
+        self.metrics.decode_tokens += n_active
         for s, req in enumerate(self.slots):
             if req is None or req.done:
                 continue
@@ -93,28 +232,23 @@ class Engine:
                 self.slots[s] = None
                 del self.active[req.rid]
 
-    def serve(self, requests: list[Request], max_ticks: int = 512):
+    def serve(self, requests: list[Request], max_ticks: int = 512) -> dict:
+        """Run to completion (or ``max_ticks``): admit pending requests into
+        free slots in batched buckets, then tick decode.  Returned stats
+        cover THIS call only (``Engine.metrics`` keeps lifetime totals)."""
         pending = list(requests)
+        start = replace(self.metrics)
         t0 = time.time()
         ticks = 0
         while (pending or self.active) and ticks < max_ticks:
-            while pending and self.submit(pending[0]):
-                pending.pop(0)
+            free = [s for s, r in enumerate(self.slots) if r is None]
+            if pending and free:
+                n = min(len(pending), len(free))
+                batch, pending = pending[:n], pending[n:]
+                self._admit(batch, free[:n])
             self.step()
             ticks += 1
-        return {"wall_s": time.time() - t0, "ticks": ticks,
-                "done": all(r.done for r in requests)}
-
-
-def _write_row(slab: jax.Array, row: jax.Array, slot: int) -> jax.Array:
-    """Write a batch-1 row cache into the slab at ``slot`` (batch axis is the
-    first axis where row is 1 and the slab is wider)."""
-    if slab.shape == row.shape:        # max_batch == 1: row IS the slab
-        return row.astype(slab.dtype)
-    for ax in range(slab.ndim):
-        if row.shape[ax] == 1 and slab.shape[ax] > 1:
-            idx = [0] * slab.ndim
-            idx[ax] = slot
-            return jax.lax.dynamic_update_slice(slab, row.astype(slab.dtype),
-                                                tuple(idx))
-    return slab
+        stats = self.metrics.since(start).summary(self.max_batch)
+        stats.update({"wall_s": time.time() - t0, "ticks": ticks,
+                      "done": all(r.done for r in requests)})
+        return stats

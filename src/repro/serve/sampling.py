@@ -1,0 +1,55 @@
+"""Token sampling for the serving engine: greedy / temperature / top-k.
+
+Pure-functional and jit-friendly: ``sample`` maps (logits, key) -> token ids
+with static shapes, so the engine threads one PRNG key through the whole
+serve loop and every run with the same seed is bit-reproducible.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+MODES = ("greedy", "temperature", "top_k")
+
+
+@dataclass(frozen=True)
+class SamplingConfig:
+    """``mode``: one of :data:`MODES`.
+
+    * ``greedy`` — argmax (temperature/top_k ignored).
+    * ``temperature`` — softmax sampling of logits / temperature.
+    * ``top_k`` — restrict to the k highest logits, then temperature-sample.
+    """
+    mode: str = "greedy"
+    temperature: float = 1.0
+    top_k: int = 0
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"mode {self.mode!r} not in {MODES}")
+        if self.mode in ("temperature", "top_k") and self.temperature <= 0:
+            raise ValueError("temperature must be > 0")
+        if self.mode == "top_k" and self.top_k <= 0:
+            raise ValueError("top_k mode needs top_k >= 1")
+
+
+def sample(logits: jax.Array, key: jax.Array, cfg: SamplingConfig
+           ) -> jax.Array:
+    """logits: (B, V) -> (B,) int32 next-token ids.
+
+    One key samples the whole batch (``jax.random.categorical`` is
+    vectorized over leading axes).  Determinism is per serve run: a fixed
+    engine seed replays the identical schedule bit-for-bit, but a request's
+    stream DOES depend on its slot index and co-tenants (the per-row noise
+    is a function of row position in the batch).
+    """
+    if cfg.mode == "greedy":
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / cfg.temperature
+    if cfg.mode == "top_k":
+        k = min(cfg.top_k, logits.shape[-1])
+        kth = jax.lax.top_k(logits, k)[0][..., -1:]       # (B, 1)
+        logits = jnp.where(logits >= kth, logits, -jnp.inf)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -5,12 +5,9 @@ in_shardings used — the dry-run lowers exactly these artifacts.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.registry import get_model, input_specs
 from repro.optim.adamw import AdamW, AdamWState

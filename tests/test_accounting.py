@@ -1,8 +1,7 @@
 """Probe-extrapolation solver: exact on synthetic component costs."""
-import numpy as np
 import pytest
 
-from repro.launch.accounting import METRICS, extrapolate, probe_plan
+from repro.launch.accounting import extrapolate, probe_plan
 from repro.models.registry import get_config
 
 

@@ -2,7 +2,6 @@
 import pytest
 
 from repro.core import cost_model as cm
-from repro.core.luna import LunaMode
 
 
 def test_table1_conventional_lut():

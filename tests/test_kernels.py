@@ -1,14 +1,16 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -e .[dev])")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.core.lut import NF4_CODEBOOK
 from repro.kernels.flash_attention.ops import mha
-from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.luna_mm.ops import luna_matmul_f32_kernel, luna_mm_codes
 from repro.kernels.luna_mm.ref import luna_mm_ref
 from repro.kernels.lut_gemm.lut_gemm import lut_gemm

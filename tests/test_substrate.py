@@ -1,6 +1,5 @@
 """Distribution substrate: checkpoint, data, optimizer, collectives, serving."""
 import os
-import shutil
 import subprocess
 import sys
 import textwrap
@@ -13,7 +12,7 @@ import pytest
 from repro.checkpoint.ckpt import Checkpointer
 from repro.data.synthetic import SyntheticLM
 from repro.models.registry import get_config, get_model
-from repro.optim.adamw import AdamW, cosine_schedule, global_norm
+from repro.optim.adamw import AdamW, cosine_schedule
 
 
 # ---------------------------------------------------------------------------
