@@ -1,5 +1,6 @@
-"""Serving-engine benchmarks: decode throughput vs slab width, and batched
-(bucketed) prefill vs per-row prefill.
+"""Serving-engine benchmarks: decode throughput vs slab width, batched
+(bucketed) prefill vs per-row prefill, paged-block KV vs the dense slab,
+and chunked-prefill interleave under a long-prompt admission.
 
 Prints the orchestrator's ``name,us_per_call,derived`` CSV rows.  Timings on
 CPU are correctness-level; the derived column carries the quantities that
@@ -10,6 +11,7 @@ transfer (tokens/s, per-token cost, speedup ratios).
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
@@ -22,7 +24,7 @@ if _SRC not in sys.path:
 DEF_BATCHES = (1, 8, 32)
 
 
-def _build(quant: str, max_batch: int, max_seq: int):
+def _build(quant: str, max_batch: int, max_seq: int, **engine_kw):
     import jax
 
     from repro.core.layers import QuantConfig
@@ -35,41 +37,44 @@ def _build(quant: str, max_batch: int, max_seq: int):
         cfg = replace(cfg, quant=QuantConfig(mode=quant))
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    return cfg, Engine(cfg, params, max_batch=max_batch, max_seq=max_seq)
+    return cfg, Engine(cfg, params, max_batch=max_batch, max_seq=max_seq,
+                       **engine_kw)
 
 
-def decode_throughput(quant: str = "bf16", batches=DEF_BATCHES,
-                      ticks: int = 24, max_seq: int = 128) -> dict:
-    """Steady-state decode tokens/s with every slot occupied, per slab width.
-
-    Fills the slab, burns warm-up ticks (jit compile + cache), then times
-    ``ticks`` decode steps.
-    """
+def _steady_decode_tok_s(eng, cfg, mb: int, ticks: int, max_seq: int
+                         ) -> float:
+    """Fill every slot, burn warm-up (compile) ticks, time ``ticks``."""
     import numpy as np
 
     from repro.serve.engine import Request
 
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size, 6).tolist(),
+                    max_new=max_seq)           # never finishes mid-bench
+            for i in range(mb)]
+    for i, r in enumerate(reqs):
+        assert eng.submit(r), i
+    for _ in range(3):                          # warm-up (compile) ticks
+        eng.step()
+    eng.metrics.decode_s = 0.0
+    eng.metrics.decode_tokens = 0
+    t0 = time.perf_counter()
+    for _ in range(ticks):
+        eng.step()
+    wall = time.perf_counter() - t0
+    return eng.metrics.decode_tokens / max(wall, 1e-9)
+
+
+def decode_throughput(quant: str = "bf16", batches=DEF_BATCHES,
+                      ticks: int = 24, max_seq: int = 128) -> dict:
+    """Steady-state decode tokens/s with every slot occupied, per slab
+    width."""
     rows = {}
     for mb in batches:
         cfg, eng = _build(quant, mb, max_seq)
-        rng = np.random.default_rng(0)
-        reqs = [Request(rid=i,
-                        prompt=rng.integers(1, cfg.vocab_size, 6).tolist(),
-                        max_new=max_seq)       # never finishes mid-bench
-                for i in range(mb)]
-        for i, r in enumerate(reqs):
-            assert eng.submit(r), i
-        for _ in range(3):                      # warm-up (compile) ticks
-            eng.step()
-        eng.metrics.decode_s = 0.0
-        eng.metrics.decode_tokens = 0
-        t0 = time.perf_counter()
-        for _ in range(ticks):
-            eng.step()
-        wall = time.perf_counter() - t0
-        toks = eng.metrics.decode_tokens
-        tok_s = toks / max(wall, 1e-9)
-        us = wall / ticks * 1e6
+        tok_s = _steady_decode_tok_s(eng, cfg, mb, ticks, max_seq)
+        us = mb / max(tok_s, 1e-9) * 1e6
         rows[mb] = tok_s
         print(f"engine_decode_b{mb},{us:.0f},"
               f"tok_s={tok_s:.1f};quant={quant};ticks={ticks}")
@@ -79,6 +84,25 @@ def decode_throughput(quant: str = "bf16", batches=DEF_BATCHES,
                 print(f"engine_decode_scaling_b{mb},0,"
                       f"tok_s_ratio_vs_b1={rows[mb] / rows[1]:.2f}")
     return rows
+
+
+def decode_paged_vs_dense(quant: str = "bf16", batch: int = 8,
+                          ticks: int = 24, max_seq: int = 128) -> dict:
+    """Steady-state decode: paged-block pool vs the dense slab, same
+    workload (acceptance gate: the paged gather must not regress decode)."""
+    rows = {}
+    for mode, kw in (("dense", {}),
+                     ("paged", {"paged": True, "block_size": 16})):
+        cfg, eng = _build(quant, batch, max_seq, **kw)
+        tok_s = _steady_decode_tok_s(eng, cfg, batch, ticks, max_seq)
+        us = batch / max(tok_s, 1e-9) * 1e6
+        rows[mode] = tok_s
+        print(f"engine_decode_{mode}_b{batch},{us:.0f},"
+              f"tok_s={tok_s:.1f};quant={quant}")
+    ratio = rows["paged"] / max(rows["dense"], 1e-9)
+    print(f"engine_decode_paged_vs_dense_b{batch},0,"
+          f"tok_s_ratio={ratio:.2f}")
+    return {"dense": rows["dense"], "paged": rows["paged"], "ratio": ratio}
 
 
 def prefill_batched_vs_per_row(quant: str = "bf16", batch: int = 8,
@@ -129,13 +153,99 @@ def prefill_batched_vs_per_row(quant: str = "bf16", batch: int = 8,
     return {"per_row_s": per_row, "batched_s": batched, "speedup": speedup}
 
 
+def long_prompt_interleave(quant: str = "bf16", max_seq: int = 128,
+                           chunk: int = 16) -> dict:
+    """Admit a (max_seq-1)-token prompt while 3 slots decode.
+
+    Whole-prompt admission stalls every decoder for the full prefill;
+    chunked admission interleaves — the decoders keep emitting one token
+    per tick.  Reports decode tokens emitted during the admission window.
+    """
+    import numpy as np
+
+    from repro.serve.engine import Request
+
+    rows = {}
+    for mode, kw in (("whole", {}),
+                     ("chunked", {"prefill_chunk": chunk})):
+        cfg, eng = _build(quant, 4, max_seq, **kw)
+        rng = np.random.default_rng(0)
+        short = [Request(rid=i,
+                         prompt=rng.integers(1, cfg.vocab_size, 6).tolist(),
+                         max_new=max_seq)
+                 for i in range(3)]
+        for r in short:
+            assert eng.submit(r)
+        for _ in range(3):                      # warm-up/compile ticks
+            eng.step()
+        long = Request(rid=9,
+                       prompt=rng.integers(1, cfg.vocab_size,
+                                           max_seq - 1).tolist(),
+                       max_new=4)
+        emitted0 = sum(len(r.out) for r in short)
+        t0 = time.perf_counter()
+        assert eng.submit(long)                 # whole mode prefills HERE
+        while not long.out:                     # chunked mode: tick it in
+            eng.step()
+        wall = time.perf_counter() - t0
+        during = sum(len(r.out) for r in short) - emitted0
+        rows[mode] = during
+        print(f"engine_admit_long_{mode},{wall * 1e6:.0f},"
+              f"decode_toks_during_admission={during};len={max_seq - 1};"
+              f"chunk={chunk if mode == 'chunked' else 0}")
+    return rows
+
+
+def bench_json(path: str = "BENCH_engine.json", batches=DEF_BATCHES,
+               ticks: int = 6, max_seq: int = 64,
+               quant: str = "bf16") -> dict:
+    """Machine-readable engine numbers for the perf trajectory: decode
+    tok/s, prefill tok/s and occupancy per slab width, via a short serve()
+    of 2*mb mixed-length requests after a steady-state decode measurement.
+    """
+    import numpy as np
+
+    from repro.serve.engine import Request
+
+    out = {"quant": quant, "max_seq": max_seq, "ticks": ticks,
+           "per_batch": {}}
+    for mb in batches:
+        cfg, eng = _build(quant, mb, max_seq)
+        decode_tok_s = _steady_decode_tok_s(eng, cfg, mb, ticks, max_seq)
+        cfg, eng = _build(quant, mb, max_seq)
+        rng = np.random.default_rng(1)
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(
+                            1, cfg.vocab_size,
+                            int(rng.integers(3, 12))).tolist(),
+                        max_new=6)
+                for i in range(2 * mb)]
+        stats = eng.serve(reqs)
+        out["per_batch"][str(mb)] = {
+            "decode_tok_s": decode_tok_s,
+            "prefill_tok_s": stats["prefill_tok_s"],
+            "occupancy": stats["occupancy"],
+        }
+        print(f"engine_json_b{mb},0,decode_tok_s={decode_tok_s:.1f};"
+              f"prefill_tok_s={stats['prefill_tok_s']:.1f};"
+              f"occupancy={stats['occupancy']:.2f}")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"engine_json,0,wrote={path}")
+    return out
+
+
 def smoke() -> None:
-    """Tiny CI-sized run: decode at b in (1, 4) + prefill comparison at 4."""
+    """Tiny CI-sized run: decode at b in (1, 4), prefill comparison, paged
+    parity and the long-prompt interleave at reduced sizes."""
     decode_throughput(batches=(1, 4), ticks=6, max_seq=64)
     prefill_batched_vs_per_row(batch=4, prompt_len=12, max_seq=64, iters=1)
+    decode_paged_vs_dense(batch=4, ticks=6, max_seq=64)
+    long_prompt_interleave(max_seq=64, chunk=16)
 
 
-ALL = [decode_throughput, prefill_batched_vs_per_row]
+ALL = [decode_throughput, decode_paged_vs_dense, prefill_batched_vs_per_row,
+       long_prompt_interleave]
 
 
 def main() -> None:
@@ -146,16 +256,28 @@ def main() -> None:
                     default=list(DEF_BATCHES))
     ap.add_argument("--ticks", type=int, default=24)
     ap.add_argument("--prefill-batch", type=int, default=8)
+    ap.add_argument("--json", default=None,
+                    help="also write BENCH_engine.json-style output here")
     ap.add_argument("--smoke", action="store_true")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
     if args.smoke:
         smoke()
+        if args.json:
+            bench_json(args.json)
         return
     ok = True
     decode_throughput(args.quant, tuple(args.batches), args.ticks)
+    pd = decode_paged_vs_dense(args.quant, batch=8, ticks=args.ticks)
+    if pd["ratio"] < 0.6:        # CPU timing is noisy; gate gross regressions
+        print(f"engine_paged_regression,FAIL,"
+              f"paged_much_slower_than_dense={pd['ratio']:.2f}")
+        ok = False
     res = prefill_batched_vs_per_row(args.quant, args.prefill_batch)
+    long_prompt_interleave(quant=args.quant)
+    if args.json:
+        bench_json(args.json, quant=args.quant)
     if res["speedup"] <= 1.0:
         print(f"engine_prefill_regression,FAIL,"
               f"batched_slower_than_per_row={res['speedup']:.2f}")

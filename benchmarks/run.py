@@ -2,7 +2,9 @@
 engine and roofline benches.  Prints ``name,us_per_call,derived`` CSV.
 
 ``--smoke`` runs a minutes-not-hours subset (CI uploads its CSV as an
-artifact): one kernel bench + the serving-engine smoke.
+artifact): one kernel bench + the serving-engine smoke, and writes
+``BENCH_engine.json`` (decode/prefill tok/s + occupancy per slab width) so
+the perf trajectory accumulates across commits.
 """
 from __future__ import annotations
 
@@ -39,7 +41,8 @@ def main() -> None:
     from benchmarks import engine_bench, kernel_bench
 
     if args.smoke:
-        failures = _run([kernel_bench.luna_mm_modes, engine_bench.smoke],
+        failures = _run([kernel_bench.luna_mm_modes, engine_bench.smoke,
+                         engine_bench.bench_json],
                         failures)
         if failures:
             sys.exit(1)

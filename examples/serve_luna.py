@@ -33,6 +33,11 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--top-k", type=int, default=40)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged-block KV cache (per-request block budgets)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill: admit long prompts N tokens at a "
+                         "time, interleaved with decode ticks")
     args = ap.parse_args()
 
     cfg = get_config("yi-9b").reduced(quant=QuantConfig(mode=args.quant))
@@ -41,7 +46,8 @@ def main():
     sampling = SamplingConfig(mode=args.sampling,
                               temperature=args.temperature, top_k=args.top_k)
     engine = Engine(cfg, params, max_batch=4, max_seq=96,
-                    sampling=sampling, seed=args.seed)
+                    sampling=sampling, seed=args.seed, paged=args.paged,
+                    prefill_chunk=args.prefill_chunk)
 
     rng = np.random.default_rng(0)
     # deliberately mixed prompt lengths: the engine buckets them for prefill

@@ -20,6 +20,18 @@ def main():
     ap.add_argument("--prefill-bucket", type=int, default=16,
                     help="prompt lengths are padded up to multiples of this "
                          "and prefilled one jit call per bucket")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged-block KV cache: per-request block "
+                         "reservation instead of full max-seq rows "
+                         "(attention families)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV block in --paged mode")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="pool size in blocks (default: dense-equivalent "
+                         "capacity + the reserved garbage block)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="admit prompts longer than this in N-token chunks "
+                         "interleaved with decode ticks")
     ap.add_argument("--sampling", default="greedy",
                     choices=["greedy", "temperature", "top_k"])
     ap.add_argument("--temperature", type=float, default=1.0)
@@ -49,7 +61,10 @@ def main():
                               top_k=args.top_k)
     engine = Engine(cfg, params, max_batch=args.max_batch,
                     max_seq=args.max_seq, sampling=sampling,
-                    seed=args.seed, prefill_bucket=args.prefill_bucket)
+                    seed=args.seed, prefill_bucket=args.prefill_bucket,
+                    paged=args.paged, block_size=args.block_size,
+                    num_blocks=args.num_blocks,
+                    prefill_chunk=args.prefill_chunk)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(1, cfg.vocab_size, 6).tolist(),

@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.layers import quant_matmul
-from repro.models.common import apply_rope, dense_init
+from repro.models.common import (apply_rope, dense_init, paged_gather,
+                                 paged_write)
 
 
 class KVCache(NamedTuple):
@@ -186,10 +187,14 @@ def gqa_attention(params, x: jax.Array, cfg, *, positions: jax.Array,
                   cache: KVCache | None = None, cache_index=None,
                   causal: bool = True, kv_x: jax.Array | None = None,
                   rope: bool = True, num_heads=None, num_kv_heads=None,
-                  head_dim=None, impl=None):
+                  head_dim=None, impl=None, block_table=None):
     """Returns (out (B,S,D), new_cache).
 
     ``kv_x``: cross-attention source (encoder output); disables cache rope.
+    ``block_table``: (B, nblk) int32 — the cache leaves are then paged
+    pools (num_blocks, block_size, ...) instead of dense (B, S, ...) slabs;
+    decode writes at ``table[row, pos // bs]`` and attends over the gathered
+    logical-order view (decode-only, S == 1).
     """
     b, s, d = x.shape
     h = num_heads or cfg.num_heads
@@ -212,16 +217,38 @@ def gqa_attention(params, x: jax.Array, cfg, *, positions: jax.Array,
         if s == 1 and cfg.decode_attn == "sharded":
             from repro.parallel.act_sharding import current_mesh
             mesh = current_mesh()
+            shard_axis = (cache.k.shape[0] if block_table is not None
+                          else cache.k.shape[1])
             if mesh is not None and "model" in mesh.axis_names \
-                    and cache.k.shape[1] % mesh.shape["model"] == 0:
+                    and shard_axis % mesh.shape["model"] == 0:
                 from repro.serve.decode_attention import sharded_gqa_decode
                 out, k_all, v_all = sharded_gqa_decode(
                     q, cache.k, cache.v, k, v, cache_index, mesh,
                     sm_scale=1.0 / float(dh) ** 0.5,
-                    grouped_bf16=cfg.decode_attn_precision == "bf16_grouped")
+                    grouped_bf16=cfg.decode_attn_precision == "bf16_grouped",
+                    block_table=block_table)
                 out = out.reshape(b, s, h * dh)
                 return (quant_matmul(out, params["wo"], cfg.quant, "attn"),
                         KVCache(k_all, v_all))
+        if block_table is not None:
+            # paged decode: write the new KV at the row's logical depth via
+            # the block table, attend over the gathered logical-order view
+            assert s == 1, "paged block_table is decode-only (S == 1)"
+            idx = jnp.asarray(cache_index, jnp.int32) \
+                + jnp.zeros((b,), jnp.int32)
+            k_pool = paged_write(cache.k, k, block_table, idx)
+            v_pool = paged_write(cache.v, v, block_table, idx)
+            new_cache = KVCache(k_pool, v_pool)
+            k = paged_gather(k_pool, block_table)
+            v = paged_gather(v_pool, block_table)
+            out = sdpa(q, k, v, causal=causal, q_offset=idx, kv_len=idx + 1,
+                       impl=impl or cfg.attn_impl, chunk=cfg.attn_chunk,
+                       unroll=not cfg.scan_layers, f32_operands=cfg.attn_f32,
+                       fused_mask=cfg.attn_fused_mask,
+                       causal_skip=cfg.attn_causal_skip)
+            out = out.reshape(b, s, h * dh)
+            return (quant_matmul(out, params["wo"], cfg.quant, "attn"),
+                    new_cache)
         if getattr(cache_index, "ndim", 0) == 1:
             # per-row decode positions: every slab row writes its new KV at
             # its own depth (single batched scatter, static shapes)
@@ -275,11 +302,15 @@ def init_mla(key, cfg):
 
 
 def mla_attention(params, x: jax.Array, cfg, *, positions: jax.Array,
-                  cache: KVCache | None = None, cache_index=None):
+                  cache: KVCache | None = None, cache_index=None,
+                  block_table=None):
     """MLA with the compressed-cache decode path.
 
     Cache stores (c_kv (B,S,R), k_rope (B,S,dr)) — the 'absorbed' form keeps
     decode FLOPs at O(R + dr) per head instead of materializing per-head K/V.
+    ``block_table``: (B, nblk) — cache leaves are paged pools
+    (num_blocks, block_size, R) / (num_blocks, block_size, dr); see
+    :func:`gqa_attention`.
     """
     m = cfg.mla
     b, s, d = x.shape
@@ -305,8 +336,10 @@ def mla_attention(params, x: jax.Array, cfg, *, positions: jax.Array,
     if cache is not None and s == 1 and cfg.decode_attn == "sharded":
         from repro.parallel.act_sharding import current_mesh
         mesh = current_mesh()
+        shard_axis = (cache.k.shape[0] if block_table is not None
+                      else cache.k.shape[1])
         if mesh is not None and "model" in mesh.axis_names \
-                and cache.k.shape[1] % mesh.shape["model"] == 0:
+                and shard_axis % mesh.shape["model"] == 0:
             from repro.serve.decode_attention import sharded_mla_decode
             w_uk = params["w_uk"].reshape(m.kv_lora_rank, h, m.qk_nope_dim)
             q_abs = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
@@ -314,7 +347,7 @@ def mla_attention(params, x: jax.Array, cfg, *, positions: jax.Array,
             ctx_c, c_all, r_all = sharded_mla_decode(
                 q_abs, q_rope.astype(jnp.float32), cache.k, cache.v,
                 c_kv, k_rope, cache_index, mesh,
-                sm_scale=1.0 / float(qd) ** 0.5)
+                sm_scale=1.0 / float(qd) ** 0.5, block_table=block_table)
             w_uv = params["w_uv"].reshape(m.kv_lora_rank, h, m.v_dim)
             ctx = jnp.einsum("bqhr,rhd->bqhd", ctx_c.astype(jnp.float32),
                              w_uv.astype(jnp.float32))
@@ -322,7 +355,18 @@ def mla_attention(params, x: jax.Array, cfg, *, positions: jax.Array,
             return (quant_matmul(ctx, params["wo"], cfg.quant, "attn"),
                     KVCache(c_all, r_all))
     if cache is not None:
-        if getattr(cache_index, "ndim", 0) == 1:
+        if block_table is not None:
+            assert s == 1, "paged block_table is decode-only (S == 1)"
+            idx = jnp.asarray(cache_index, jnp.int32) \
+                + jnp.zeros((b,), jnp.int32)
+            c_all = paged_write(cache.k, c_kv, block_table, idx)
+            r_all = paged_write(cache.v, k_rope, block_table, idx)
+            new_cache = KVCache(c_all, r_all)
+            c_kv = paged_gather(c_all, block_table)
+            k_rope = paged_gather(r_all, block_table)
+            kv_len = idx + 1
+            q_offset = idx
+        elif getattr(cache_index, "ndim", 0) == 1:
             assert s == 1, "per-row cache_index is decode-only (S == 1)"
             rows = jnp.arange(b)
             c_all = cache.k.at[rows, cache_index].set(
@@ -334,10 +378,11 @@ def mla_attention(params, x: jax.Array, cfg, *, positions: jax.Array,
                 cache.k, c_kv.astype(cache.k.dtype), (0, cache_index, 0))
             r_all = jax.lax.dynamic_update_slice(
                 cache.v, k_rope.astype(cache.v.dtype), (0, cache_index, 0))
-        new_cache = KVCache(c_all, r_all)
-        c_kv, k_rope = c_all, r_all
-        kv_len = cache_index + s
-        q_offset = cache_index
+        if block_table is None:
+            new_cache = KVCache(c_all, r_all)
+            c_kv, k_rope = c_all, r_all
+            kv_len = cache_index + s
+            q_offset = cache_index
 
     sk = c_kv.shape[1]
     # Absorbed scores: q_nope^T (W_uk c) == (q_nope W_uk^T)^T c
@@ -386,8 +431,3 @@ def mla_attention(params, x: jax.Array, cfg, *, positions: jax.Array,
     ctx = jnp.einsum("bqhr,rhd->bqhd", ctx_c, w_uv.astype(jnp.float32))
     ctx = ctx.reshape(b, s, h * m.v_dim).astype(x.dtype)
     return quant_matmul(ctx, params["wo"], cfg.quant, "attn"), new_cache
-
-
-def mla_cache_shape(cfg, batch: int, s_max: int):
-    m = cfg.mla
-    return ((batch, s_max, m.kv_lora_rank), (batch, s_max, m.qk_rope_dim))

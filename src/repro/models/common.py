@@ -45,6 +45,35 @@ def token_positions(s: int, cache_index) -> jax.Array:
     return jnp.arange(s)[None, :] + idx
 
 
+def paged_gather(pool: jax.Array, block_table: jax.Array) -> jax.Array:
+    """Logical-order view of each row's paged cache.
+
+    ``pool``: (num_blocks, block_size, ...); ``block_table``: (B, nblk)
+    int32 physical block ids in logical order.  Returns
+    (B, nblk * block_size, ...) — column ``j`` is logical token ``j`` of the
+    row.  Unreserved table entries point at the garbage block; their columns
+    sit beyond the row's ``kv_len`` and are masked by the caller.
+    """
+    g = pool[jnp.clip(block_table, 0, pool.shape[0] - 1)]
+    return g.reshape((block_table.shape[0], -1) + pool.shape[2:])
+
+
+def paged_write(pool: jax.Array, new: jax.Array, block_table: jax.Array,
+                index: jax.Array) -> jax.Array:
+    """Write one new token per row into a paged pool at its logical depth.
+
+    ``new``: (B, 1, ...); ``index``: (B,) logical positions.  The physical
+    target is ``block_table[row, index // block_size]`` at offset
+    ``index % block_size``.  Rows the engine parks on the garbage block all
+    write there (duplicate indices — nondeterministic winner, never read).
+    """
+    bs = pool.shape[1]
+    idx = jnp.asarray(index, jnp.int32)
+    rows = jnp.arange(new.shape[0])
+    phys = block_table[rows, idx // bs]
+    return pool.at[phys, idx % bs].set(new[:, 0].astype(pool.dtype))
+
+
 def gather_last(hidden: jax.Array, last_pos) -> jax.Array:
     """hidden: (B, S, D) -> (B, 1, D) at per-row ``last_pos`` (B,) (the last
     REAL token of each row in a right-padded prefill batch)."""

@@ -136,7 +136,14 @@ class HybridLM:
                             unroll=not self.cfg.scan_layers)
         return xent, {"xent": xent}
 
-    def init_cache(self, batch: int, s_max: int):
+    def init_cache(self, batch: int, s_max: int, *, block_size=None,
+                   num_blocks=None):
+        """Hybrid slots carry recurrent SSM state alongside the shared-block
+        KV caches — both stay dense per slot; the paged pool applies to the
+        pure-attention families only."""
+        if block_size is not None or num_blocks is not None:
+            raise ValueError("hybrid family keeps dense per-slot state; "
+                             "paged KV cache applies to attention slabs")
         cfg = self.cfg
         hc = cfg.hybrid
         dt = jnp.dtype(cfg.dtype)
@@ -151,7 +158,13 @@ class HybridLM:
             jnp.zeros((cfg.num_layers,) + state_s, jnp.float32))
         return (attn_caches, ssm_caches)
 
-    def prefill(self, params, tokens, caches, *, last_pos=None):
+    def prefill(self, params, tokens, caches, *, last_pos=None,
+                cache_index=0):
+        """``cache_index`` must be 0: the mamba2 chunked scan restarts its
+        carried state per call (masked SSD scan pending — see ROADMAP)."""
+        if cache_index != 0:
+            raise ValueError("hybrid prefill is whole-prompt only "
+                             "(chunked prefill needs a masked SSD scan)")
         hidden, new_caches = self.forward(params, tokens, caches=caches,
                                           cache_index=0)
         last = (hidden[:, -1:] if last_pos is None
@@ -159,9 +172,11 @@ class HybridLM:
         logits = quant_matmul(last, params["lm_head"], None)
         return logits, new_caches
 
-    def decode_step(self, params, token, caches, index):
+    def decode_step(self, params, token, caches, index, block_tables=None):
         """``index``: scalar or (B,) per-row positions (attention caches
-        honor per-row depths; the SSM state recurrence is position-free)."""
+        honor per-row depths; the SSM state recurrence is position-free).
+        ``block_tables`` must be None (dense per-slot caches)."""
+        assert block_tables is None, "hybrid caches are dense (no block table)"
         hidden, new_caches = self.forward(params, token, caches=caches,
                                           cache_index=index)
         logits = quant_matmul(hidden, params["lm_head"], None)

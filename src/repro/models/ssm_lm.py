@@ -68,7 +68,13 @@ class SSMLM:
                             unroll=not self.cfg.scan_layers)
         return xent, {"xent": xent}
 
-    def init_cache(self, batch: int, s_max: int):
+    def init_cache(self, batch: int, s_max: int, *, block_size=None,
+                   num_blocks=None):
+        """Recurrent state is O(1) per slot — paging buys nothing, so the
+        paged knobs are rejected and the cache stays dense (B, ...)."""
+        if block_size is not None or num_blocks is not None:
+            raise ValueError("ssm family keeps dense per-slot state; "
+                             "paged KV cache applies to attention slabs")
         cfg = self.cfg
         dt = jnp.dtype(cfg.dtype)
         conv_s, state_s = ssm_cache_shape(cfg, batch)
@@ -76,16 +82,25 @@ class SSMLM:
             jnp.zeros((cfg.num_layers,) + conv_s, dt),
             jnp.zeros((cfg.num_layers,) + state_s, jnp.float32))
 
-    def prefill(self, params, tokens, caches, *, last_pos=None):
+    def prefill(self, params, tokens, caches, *, last_pos=None,
+                cache_index=0):
+        """``cache_index`` must be 0: the chunked SSD scan restarts its
+        carried state per call, so chunked/offset prefill would silently
+        drop pre-chunk history (needs the masked SSD scan — see ROADMAP)."""
+        if cache_index != 0:
+            raise ValueError("ssm prefill is whole-prompt only "
+                             "(chunked prefill needs a masked SSD scan)")
         hidden, new_caches = self.forward(params, tokens, caches=caches)
         last = (hidden[:, -1:] if last_pos is None
                 else gather_last(hidden, last_pos))
         logits = quant_matmul(last, params["lm_head"], None)
         return logits, new_caches
 
-    def decode_step(self, params, token, caches, index):
+    def decode_step(self, params, token, caches, index, block_tables=None):
         """``index``: scalar or (B,) — unused by the position-free SSM
-        recurrence, accepted for a uniform engine-facing signature."""
+        recurrence, accepted for a uniform engine-facing signature.
+        ``block_tables`` must be None (dense recurrent state)."""
+        assert block_tables is None, "ssm caches are dense (no block table)"
         hidden, new_caches = self.forward(params, token, caches=caches,
                                           cache_index=index)
         logits = quant_matmul(hidden, params["lm_head"], None)

@@ -40,16 +40,17 @@ def _block_init(key, cfg, *, use_moe: bool, d_ff: int | None = None):
     return p
 
 
-def _block_apply(p, x, cfg, *, positions, cache, cache_index, use_moe: bool):
+def _block_apply(p, x, cfg, *, positions, cache, cache_index, use_moe: bool,
+                 block_tables=None):
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
     if cfg.mla:
         a, new_cache = attn_mod.mla_attention(
             p["attn"], h, cfg, positions=positions, cache=cache,
-            cache_index=cache_index)
+            cache_index=cache_index, block_table=block_tables)
     else:
         a, new_cache = attn_mod.gqa_attention(
             p["attn"], h, cfg, positions=positions, cache=cache,
-            cache_index=cache_index)
+            cache_index=cache_index, block_table=block_tables)
     x = x + a
     h = rms_norm(x, p["ln2"], cfg.norm_eps)
     aux = jnp.zeros((), jnp.float32)
@@ -92,7 +93,7 @@ class TransformerLM:
 
     # ---------------- forward ----------------
     def _scan_blocks(self, params, x, *, positions, caches, cache_index,
-                     training: bool):
+                     training: bool, block_tables=None):
         cfg = self.cfg
         use_moe = cfg.moe is not None
         from repro.parallel.act_sharding import shard_hidden
@@ -103,7 +104,8 @@ class TransformerLM:
             h = shard_hidden(h)
             h2, new_cache, aux_i = _block_apply(
                 p_i, h, cfg, positions=positions, cache=cache_i,
-                cache_index=cache_index, use_moe=use_moe)
+                cache_index=cache_index, use_moe=use_moe,
+                block_tables=block_tables)
             return (shard_hidden(h2), aux + aux_i), new_cache
 
         if training and cfg.remat:
@@ -136,7 +138,7 @@ class TransformerLM:
         return x, aux, new_caches
 
     def forward(self, params, tokens=None, *, embeds=None, caches=None,
-                cache_index=0, training: bool = False):
+                cache_index=0, training: bool = False, block_tables=None):
         """Returns (hidden (B,S,D), aux, new_caches)."""
         cfg = self.cfg
         if embeds is None:
@@ -154,13 +156,15 @@ class TransformerLM:
             c = dense_caches[i] if dense_caches is not None else None
             x, nc, _ = _block_apply(
                 params["dense_blocks"][i], x, cfg, positions=positions,
-                cache=c, cache_index=cache_index, use_moe=False)
+                cache=c, cache_index=cache_index, use_moe=False,
+                block_tables=block_tables)
             new_dense_caches.append(nc)
         x, aux, new_scan = self._scan_blocks(
             params, x, positions=positions,
             caches=scan_caches if scan_caches is not None else _none_caches(
                 cfg.num_layers - n_dense),
-            cache_index=cache_index, training=training)
+            cache_index=cache_index, training=training,
+            block_tables=block_tables)
         x = rms_norm(x, params["ln_f"], cfg.norm_eps)
         new_caches = (new_dense_caches, new_scan) if caches is not None else None
         return x, aux, new_caches
@@ -186,44 +190,63 @@ class TransformerLM:
         return xent + aux, {"xent": xent, "aux": aux}
 
     # ---------------- serving ----------------
-    def init_cache(self, batch: int, s_max: int) -> tuple:
+    def init_cache(self, batch: int, s_max: int, *, block_size: int | None
+                   = None, num_blocks: int | None = None) -> tuple:
+        """Dense slab caches (B, s_max, ...) by default.  With
+        ``block_size``/``num_blocks``, every KV leaf becomes a paged pool
+        (num_blocks, block_size, ...) shared by all slots and indexed via a
+        per-row block table (``batch``/``s_max`` then only size the layout,
+        not the leaves)."""
         cfg = self.cfg
         dt = jnp.dtype(cfg.dtype)
         moe = cfg.moe
         n_dense = moe.first_dense if moe else 0
         n_scan = cfg.num_layers - n_dense
+        if block_size is not None:
+            assert num_blocks is not None, "paged cache needs num_blocks"
+            lead = (num_blocks, block_size)
+        else:
+            lead = (batch, s_max)
 
-        def one(b_shape):
+        def one():
             if cfg.mla:
-                (cs, rs) = attn_mod.mla_cache_shape(cfg, batch, s_max)
-                return KVCache(jnp.zeros(cs, dt), jnp.zeros(rs, dt))
-            hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
-            shape = (batch, s_max, hkv, dh)
-            return KVCache(jnp.zeros(shape, dt), jnp.zeros(shape, dt))
+                m = cfg.mla
+                tails = ((m.kv_lora_rank,), (m.qk_rope_dim,))
+            else:
+                hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+                tails = ((hkv, dh), (hkv, dh))
+            return KVCache(jnp.zeros(lead + tails[0], dt),
+                           jnp.zeros(lead + tails[1], dt))
 
-        dense_caches = [one(None) for _ in range(n_dense)]
-        one_c = one(None)
+        dense_caches = [one() for _ in range(n_dense)]
+        one_c = one()
         scan_caches = jax.tree.map(
             lambda a: jnp.broadcast_to(a[None], (n_scan,) + a.shape).copy(),
             one_c)
         return (dense_caches, scan_caches)
 
-    def prefill(self, params, tokens, caches, *, embeds=None, last_pos=None):
+    def prefill(self, params, tokens, caches, *, embeds=None, last_pos=None,
+                cache_index=0):
         """``last_pos``: optional (B,) per-row index of the last REAL token
-        (right-padded batched prefill); default = the final column."""
+        (right-padded batched prefill); default = the final column.
+        ``cache_index``: scalar write offset — chunked prefill feeds the
+        prompt in pieces, each continuing at the previous chunk's end."""
         hidden, _, new_caches = self.forward(
-            params, tokens, embeds=embeds, caches=caches, cache_index=0)
+            params, tokens, embeds=embeds, caches=caches,
+            cache_index=cache_index)
         last = (hidden[:, -1:] if last_pos is None
                 else gather_last(hidden, last_pos))
         logits = self.logits(params, last)
         return logits, new_caches
 
-    def decode_step(self, params, token, caches, index):
+    def decode_step(self, params, token, caches, index, block_tables=None):
         """token: (B, 1) int32; index: scalar int32 position shared by all
         rows, or a (B,) int32 array of per-row positions (mixed-depth
-        continuous batching)."""
+        continuous batching).  ``block_tables``: (B, nblk) int32 when
+        ``caches`` are paged pools (see ``init_cache``)."""
         hidden, _, new_caches = self.forward(
-            params, token, caches=caches, cache_index=index)
+            params, token, caches=caches, cache_index=index,
+            block_tables=block_tables)
         return self.logits(params, hidden), new_caches
 
 

@@ -1,6 +1,6 @@
 """Continuous-batching serving engine: batched prefill + mixed-depth decode.
 
-A fixed slab of ``max_batch`` sequence slots.  New requests are bucketed by
+A fixed set of ``max_batch`` sequence slots.  New requests are bucketed by
 padded prompt length and prefilled in ONE jit call per bucket (rows are
 written into the slab caches with a single batched scatter); every decode
 tick advances all active slots one token **at their own position** — a
@@ -8,6 +8,31 @@ tick advances all active slots one token **at their own position** — a
 ``model.decode_step`` so rows of different depths attend over exactly their
 own prefix (static shapes: jit caches one decode program plus one prefill
 program per bucket shape).
+
+Two cache substrates, token-identical by construction (the dense slab stays
+as the reference oracle):
+
+* **dense** (default) — per-slot (max_batch, max_seq, ...) cache rows; a
+  slot reserves a full ``max_seq`` row for its whole lifetime.
+* **paged** (``paged=True``) — the KV leaves become pools of
+  ``num_blocks`` fixed ``block_size``-token blocks with a per-slot block
+  table: admission reserves only ``ceil(min(len(prompt) + max_new,
+  max_seq) / block_size)`` blocks (so decode can never run out
+  mid-request), freeing a slot just returns its blocks to the pool, and a
+  short request no longer pays a long request's reservation.  When the pool
+  is short, admission backpressures (FIFO head-of-line) until blocks free.
+
+**Chunked prefill** (``prefill_chunk=N``): prompts longer than N tokens are
+admitted in N-token pieces interleaved with decode ticks — each tick runs
+at most ONE chunk of prefill work before the decode step, so a
+``max_seq``-long admission never stalls active decodes for more than one
+chunk's worth of compute.  Attention families only: the mamba2 SSD scan
+restarts its carried state per call, so recurrent/hybrid prompts still
+prefill whole (masked SSD scan — see ROADMAP).
+
+Sampling draws from per-request PRNG streams (``fold_in(seed_key, rid)``
+then per-token step) — a request's sampled tokens are independent of its
+slot index, co-tenants, and scheduling, for every sampling mode.
 
 Serving the paper's technique = run with ``--quant luna_*`` so every
 projection goes through the LUNA integer path.
@@ -22,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.registry import get_model
+from repro.serve.paged import GARBAGE_BLOCK, BlockAllocator, blocks_needed
 from repro.serve.sampling import SamplingConfig, sample
 
 
@@ -35,13 +61,23 @@ class Request:
 
 
 @dataclass
+class _ChunkedPrefill:
+    """A long admission in flight: its reserved slot + staged cache rows."""
+    req: Request
+    slot: int
+    staging: object        # dense (1, stage_len) cache tree
+    consumed: int = 0      # prompt tokens already prefilled
+
+
+@dataclass
 class EngineMetrics:
     """Wall-clock + token accounting split by phase."""
     prefill_s: float = 0.0
     decode_s: float = 0.0
     prefill_tokens: int = 0      # prompt tokens pushed through prefill
     decode_tokens: int = 0       # tokens emitted by decode ticks
-    prefill_calls: int = 0
+    prefill_calls: int = 0       # jit prefill invocations (bucket or chunk)
+    prefill_chunks: int = 0      # chunked-admission pieces among those
     ticks: int = 0
     occupancy_sum: int = 0       # sum over ticks of active slots
 
@@ -59,6 +95,7 @@ class EngineMetrics:
             "prefill_tokens": self.prefill_tokens,
             "decode_tokens": self.decode_tokens,
             "prefill_calls": self.prefill_calls,
+            "prefill_chunks": self.prefill_chunks,
             "ticks": self.ticks,
             "prefill_tok_s": self.prefill_tokens / max(self.prefill_s, 1e-9),
             "decode_tok_s": self.decode_tokens / max(self.decode_s, 1e-9),
@@ -77,7 +114,10 @@ PADDED_PREFILL_FAMILIES = ("dense", "moe")
 class Engine:
     def __init__(self, cfg, params, *, max_batch: int = 8,
                  max_seq: int = 256, sampling: SamplingConfig | None = None,
-                 seed: int = 0, prefill_bucket: int = 16):
+                 seed: int = 0, prefill_bucket: int = 16,
+                 paged: bool = False, block_size: int = 16,
+                 num_blocks: int | None = None,
+                 prefill_chunk: int | None = None):
         if cfg.family in ("encdec", "vlm"):
             raise ValueError(
                 f"family {cfg.family!r} needs modality inputs the text-only "
@@ -93,22 +133,59 @@ class Engine:
         self.sampling = sampling or SamplingConfig()
         self.prefill_bucket = prefill_bucket
         self._pad_ok = cfg.family in PADDED_PREFILL_FAMILIES
-        self.caches = self.model.init_cache(max_batch, max_seq)
+        if paged and not self._pad_ok:
+            raise ValueError(
+                f"family {cfg.family!r} keeps dense per-slot state; the "
+                "paged KV cache applies to attention-slab families "
+                f"{PADDED_PREFILL_FAMILIES}")
+        if prefill_chunk is not None:
+            if prefill_chunk < 1:
+                raise ValueError(f"prefill_chunk must be >= 1, "
+                                 f"got {prefill_chunk}")
+            if not self._pad_ok:
+                raise ValueError(
+                    f"family {cfg.family!r} prefills whole prompts only "
+                    "(chunked prefill needs a masked SSD scan; see ROADMAP)")
+        self.paged = paged
+        self.prefill_chunk = prefill_chunk
+        if paged:
+            self.block_size = block_size
+            self.blocks_per_row = -(-max_seq // block_size)
+            self.num_blocks = (num_blocks if num_blocks is not None
+                               else max_batch * self.blocks_per_row + 1)
+            self.allocator = BlockAllocator(self.num_blocks, block_size)
+            self.block_tables = np.full(
+                (max_batch, self.blocks_per_row), GARBAGE_BLOCK, np.int32)
+            self._slot_blocks: list[list[int]] = [[] for _ in
+                                                  range(max_batch)]
+            self.caches = self.model.init_cache(
+                max_batch, max_seq, block_size=block_size,
+                num_blocks=self.num_blocks)
+            # staged/fresh prefill rows cover whole blocks for the scatter
+            self._stage_len = self.blocks_per_row * block_size
+        else:
+            self.caches = self.model.init_cache(max_batch, max_seq)
+            self._stage_len = max_seq
         self._batch_axes = self._find_batch_axes()
         self.positions = np.zeros(max_batch, np.int32)
         self.key = jax.random.PRNGKey(seed)
         self.active: dict[int, Request] = {}
         self.slots: list[Request | None] = [None] * max_batch
+        self._chunked: list[_ChunkedPrefill] = []
         self.metrics = EngineMetrics()
         self._prefill = jax.jit(self._prefill_impl)
         self._decode = jax.jit(self._decode_impl)
+        self._chunk_step = jax.jit(self._chunk_step_impl)
+        self._chunk_finish = jax.jit(self._chunk_finish_impl)
 
     # --- cache-slab layout ----------------------------------------------
     def _find_batch_axes(self):
         """Per-leaf batch axis of the cache tree, found structurally by
-        diffing the shapes of two differently-sized cache trees (cache
-        layouts are family-specific: KV slabs are (B, S, ...), scanned
-        layers stack an (L,) axis in front)."""
+        diffing the shapes of two differently-sized DENSE cache trees
+        (cache layouts are family-specific: KV slabs are (B, S, ...),
+        scanned layers stack an (L,) axis in front).  Paged pools sit at
+        the same tree positions, with (num_blocks, block_size) replacing
+        (B, S) — the same axis indexes their block axis."""
         a = self.model.init_cache(2, 4)
         b = self.model.init_cache(3, 4)
 
@@ -131,31 +208,132 @@ class Engine:
 
         return jax.tree.map(one, slab_tree, rows_tree, self._batch_axes)
 
+    def _scatter_blocks(self, pool_tree, rows_tree, tables: jax.Array):
+        """Paged spelling of :meth:`_scatter_rows`: reshape each fresh
+        (k, stage_len, ...) row into (k, nblk, block_size, ...) blocks and
+        scatter them to the physical ids in ``tables`` (k, nblk).
+        Unreserved table entries all point at the garbage block — their
+        writes collide there harmlessly (never read back)."""
+        bs = self.block_size
+
+        def one(pool, rows, ax):
+            shape = (rows.shape[:ax + 1] + (tables.shape[1], bs)
+                     + rows.shape[ax + 2:])
+            blocks = rows.reshape(shape).astype(pool.dtype)
+            idx = (slice(None),) * ax + (tables,)
+            return pool.at[idx].set(blocks)
+
+        return jax.tree.map(one, pool_tree, rows_tree, self._batch_axes)
+
     # --- jit bodies -----------------------------------------------------
-    def _prefill_impl(self, params, tokens, slab, last_pos, slots, key):
-        """Prefill a (k, L) token bucket against fresh (k, max_seq) caches,
-        scatter the rows into the slab, sample each row's first token."""
+    def _prefill_impl(self, params, tokens, slab, last_pos, target, rids,
+                      key):
+        """Prefill a (k, L) token bucket against fresh caches, scatter the
+        rows into the slab (dense: at slot ids; paged: at block tables),
+        sample each row's first token from its own stream."""
         k = tokens.shape[0]
-        fresh = self.model.init_cache(k, self.max_seq)
+        fresh = self.model.init_cache(k, self._stage_len)
         logits, rows = self.model.prefill(params, tokens, fresh,
                                           last_pos=last_pos)
-        new_slab = self._scatter_rows(slab, rows, slots)
-        toks = sample(logits[:, 0], key, self.sampling)
+        if self.paged:
+            new_slab = self._scatter_blocks(slab, rows, target)
+        else:
+            new_slab = self._scatter_rows(slab, rows, target)
+        toks = sample(logits[:, 0], key, self.sampling, rids=rids,
+                      steps=jnp.zeros_like(rids))
         return toks, new_slab
 
-    def _decode_impl(self, params, tokens, caches, positions, key):
+    def _decode_impl(self, params, tokens, caches, positions, tables, rids,
+                     steps, key):
         logits, new_caches = self.model.decode_step(
-            params, tokens, caches, positions)
-        toks = sample(logits[:, 0], key, self.sampling)
+            params, tokens, caches, positions, block_tables=tables)
+        toks = sample(logits[:, 0], key, self.sampling, rids=rids,
+                      steps=steps)
         return toks, new_caches
+
+    def _chunk_step_impl(self, params, tokens, staging, offset):
+        """One mid-prompt chunk: continue the staged (1, stage_len) cache
+        at ``offset`` (the trailing-logits matmul is 1 row — negligible)."""
+        _, staging = self.model.prefill(params, tokens, staging,
+                                        cache_index=offset)
+        return staging
+
+    def _chunk_finish_impl(self, params, tokens, staging, offset, last_pos,
+                           slab, target, rid, key):
+        """Final chunk: finish the staged row, sample its first token, and
+        scatter the whole staged cache into the slab/pool in one go."""
+        logits, staging = self.model.prefill(params, tokens, staging,
+                                             last_pos=last_pos,
+                                             cache_index=offset)
+        if self.paged:
+            new_slab = self._scatter_blocks(slab, staging, target)
+        else:
+            new_slab = self._scatter_rows(slab, staging, target)
+        tok = sample(logits[:, 0], key, self.sampling, rids=rid,
+                     steps=jnp.zeros_like(rid))
+        return tok, new_slab
+
+    # --- admission ------------------------------------------------------
+    def _validate(self, req: Request):
+        if req.max_new < 1:
+            raise ValueError(
+                f"request {req.rid}: max_new must be >= 1 (prefill always "
+                f"samples one token), got {req.max_new}")
+        if not (0 < len(req.prompt) <= self.max_seq - 1):
+            raise ValueError(
+                f"request {req.rid}: prompt length {len(req.prompt)} not in "
+                f"[1, max_seq-1={self.max_seq - 1}]")
+        if self.paged and self._blocks_needed(req) > self.num_blocks - 1:
+            raise ValueError(
+                f"request {req.rid} needs {self._blocks_needed(req)} blocks "
+                f"but the pool holds {self.num_blocks - 1}")
+
+    def _blocks_needed(self, req: Request) -> int:
+        return blocks_needed(len(req.prompt), req.max_new, self.max_seq,
+                             self.block_size)
+
+    def _reserve(self, req: Request, slot: int) -> bool:
+        """Paged: claim the request's lifetime block budget up front, so a
+        decode tick can never run out of blocks mid-request.  False =
+        backpressure (pool short); dense mode always succeeds."""
+        if not self.paged:
+            return True
+        blocks = self.allocator.alloc(self._blocks_needed(req))
+        if blocks is None:
+            return False
+        self._slot_blocks[slot] = blocks
+        self.block_tables[slot, :] = GARBAGE_BLOCK
+        self.block_tables[slot, :len(blocks)] = blocks
+        return True
+
+    def _release_slot_resources(self, slot: int):
+        if self.paged and self._slot_blocks[slot]:
+            self.allocator.release(self._slot_blocks[slot])
+            self._slot_blocks[slot] = []
+            self.block_tables[slot, :] = GARBAGE_BLOCK
+
+    def _free_slot(self, slot: int):
+        self.slots[slot] = None
+        self.positions[slot] = 0
+        self._release_slot_resources(slot)
+
+    def _chunkable(self, prompt_len: int) -> bool:
+        return (self.prefill_chunk is not None
+                and prompt_len > self.prefill_chunk)
 
     # --- public API -----------------------------------------------------
     def submit(self, req: Request) -> bool:
-        """Prefill one request into a free slot; False if the slab is full."""
+        """Admit one request; False if no slot is free (or, paged mode, the
+        block pool is short).  Long prompts under ``prefill_chunk`` start a
+        chunked admission — ``step()`` advances it one chunk per tick."""
+        self._validate(req)
         free = [s for s, r in enumerate(self.slots) if r is None]
-        if not free:
+        if not free or not self._reserve(req, free[0]):
             return False
-        self._admit([req], free[:1])
+        if self._chunkable(len(req.prompt)):
+            self._start_chunked(req, free[0])
+        else:
+            self._admit([req], free[:1])
         return True
 
     def _bucket_len(self, n: int) -> int:
@@ -166,14 +344,12 @@ class Engine:
 
     def _admit(self, reqs: list[Request], slots: list[int]):
         """Prefill ``reqs`` into ``slots`` — one jit call per length bucket,
-        one cache scatter per bucket (no per-row update round-trips)."""
+        one cache scatter per bucket (no per-row update round-trips).
+        Callers must have ``_validate``d (and, paged, ``_reserve``d)
+        each request first."""
         assert len(reqs) == len(slots)
         buckets: dict[int, list[int]] = {}
         for i, r in enumerate(reqs):
-            if not (0 < len(r.prompt) <= self.max_seq - 1):
-                raise ValueError(
-                    f"request {r.rid}: prompt length {len(r.prompt)} not in "
-                    f"[1, max_seq-1={self.max_seq - 1}]")
             buckets.setdefault(self._bucket_len(len(r.prompt)), []).append(i)
         for blen, idxs in buckets.items():
             k = len(idxs)
@@ -183,69 +359,160 @@ class Engine:
                 p = reqs[i].prompt
                 toks[j, :len(p)] = p
                 last[j] = len(p) - 1
-            self.key, sub = jax.random.split(self.key)
+            if self.paged:
+                target = jnp.asarray(
+                    self.block_tables[[slots[i] for i in idxs]])
+            else:
+                target = jnp.asarray([slots[i] for i in idxs])
+            rids = jnp.asarray([reqs[i].rid for i in idxs], jnp.int32)
             t0 = time.perf_counter()
             nxt, self.caches = self._prefill(
                 self.params, jnp.asarray(toks), self.caches,
-                jnp.asarray(last), jnp.asarray([slots[i] for i in idxs]),
-                sub)
+                jnp.asarray(last), target, rids, self.key)
             nxt = np.asarray(nxt)          # sync for honest wall-clock
             self.metrics.prefill_s += time.perf_counter() - t0
             self.metrics.prefill_calls += 1
             for j, i in enumerate(idxs):
                 req, slot = reqs[i], slots[i]
                 req.out.append(int(nxt[j]))
+                self.metrics.prefill_tokens += len(req.prompt)
+                if len(req.out) >= req.max_new:
+                    # cap already met by the prefill-sampled token
+                    # (max_new=1): done at admission, never decode-ticked
+                    req.done = True
+                    self._release_slot_resources(slot)
+                    continue
                 self.positions[slot] = len(req.prompt)
                 self.slots[slot] = req
                 self.active[req.rid] = req
-                self.metrics.prefill_tokens += len(req.prompt)
 
+    # --- chunked prefill ------------------------------------------------
+    def _start_chunked(self, req: Request, slot: int):
+        """Reserve ``slot`` for a long admission; the prompt is fed to a
+        staged 1-row cache one chunk per tick and only joins ``active``
+        (decode) once the last chunk lands."""
+        self.slots[slot] = req
+        self.positions[slot] = 0
+        self._chunked.append(_ChunkedPrefill(
+            req, slot, self.model.init_cache(1, self._stage_len)))
+
+    def _advance_chunked(self):
+        """Run AT MOST one prefill chunk (FIFO head) — this bounds the
+        prefill work any decode tick waits on to one chunk."""
+        if not self._chunked:
+            return
+        cp = self._chunked[0]
+        req, c = cp.req, self.prefill_chunk
+        remaining = len(req.prompt) - cp.consumed
+        t0 = time.perf_counter()
+        if remaining > c:
+            toks = np.asarray(req.prompt[cp.consumed:cp.consumed + c],
+                              np.int32)[None]
+            cp.staging = self._chunk_step(self.params, jnp.asarray(toks),
+                                          cp.staging, jnp.int32(cp.consumed))
+            jax.block_until_ready(cp.staging)
+            cp.consumed += c
+            self.metrics.prefill_s += time.perf_counter() - t0
+            self.metrics.prefill_tokens += c
+            self.metrics.prefill_calls += 1
+            self.metrics.prefill_chunks += 1
+            return
+        # final piece: pad to the bucket grid (static shapes), sample the
+        # request's first token, scatter the staged row into the slab/pool
+        self._chunked.pop(0)
+        pl = min(self._bucket_len(remaining), self._stage_len - cp.consumed)
+        toks = np.zeros((1, pl), np.int32)
+        toks[0, :remaining] = req.prompt[cp.consumed:]
+        if self.paged:
+            target = jnp.asarray(self.block_tables[cp.slot][None])
+        else:
+            target = jnp.asarray([cp.slot])
+        nxt, self.caches = self._chunk_finish(
+            self.params, jnp.asarray(toks), cp.staging,
+            jnp.int32(cp.consumed), jnp.asarray([remaining - 1]),
+            self.caches, target, jnp.asarray([req.rid], jnp.int32), self.key)
+        nxt = np.asarray(nxt)
+        self.metrics.prefill_s += time.perf_counter() - t0
+        self.metrics.prefill_tokens += remaining
+        self.metrics.prefill_calls += 1
+        self.metrics.prefill_chunks += 1
+        req.out.append(int(nxt[0]))
+        if len(req.out) >= req.max_new:
+            req.done = True
+            self._free_slot(cp.slot)
+            return
+        self.positions[cp.slot] = len(req.prompt)
+        self.active[req.rid] = req
+
+    # --- decode ---------------------------------------------------------
     def step(self):
-        """One decode tick: every active slot advances one token at its own
-        position (free/done rows compute masked garbage that is ignored)."""
+        """One engine tick: at most one chunk of pending prefill work, then
+        every active slot advances one token at its own position (free or
+        still-admitting rows compute masked garbage that is ignored — a
+        mid-admission slot's garbage writes are fully overwritten by its
+        final staged-cache scatter)."""
+        self._advance_chunked()
         if not self.active:
             return
         toks = np.zeros((self.max_batch, 1), np.int32)
+        rids = np.full(self.max_batch, -1, np.int32)
+        steps = np.zeros(self.max_batch, np.int32)
         n_active = 0
         for s, req in enumerate(self.slots):
-            if req is not None and not req.done:
+            if req is not None and req.rid in self.active:
                 toks[s, 0] = req.out[-1]
+                rids[s] = req.rid
+                steps[s] = len(req.out)
                 n_active += 1
-        self.key, sub = jax.random.split(self.key)
+        tables = jnp.asarray(self.block_tables) if self.paged else None
         t0 = time.perf_counter()
         nxt, self.caches = self._decode(
             self.params, jnp.asarray(toks), self.caches,
-            jnp.asarray(self.positions), sub)
+            jnp.asarray(self.positions), tables, jnp.asarray(rids),
+            jnp.asarray(steps), self.key)
         nxt = np.asarray(nxt)
         self.metrics.decode_s += time.perf_counter() - t0
         self.metrics.ticks += 1
         self.metrics.occupancy_sum += n_active
         self.metrics.decode_tokens += n_active
         for s, req in enumerate(self.slots):
-            if req is None or req.done:
+            if req is None or req.rid not in self.active:
                 continue
             req.out.append(int(nxt[s]))
             self.positions[s] += 1
             if len(req.out) >= req.max_new or \
                     self.positions[s] >= self.max_seq - 1:
                 req.done = True
-                self.slots[s] = None
                 del self.active[req.rid]
+                self._free_slot(s)
 
     def serve(self, requests: list[Request], max_ticks: int = 512) -> dict:
         """Run to completion (or ``max_ticks``): admit pending requests into
-        free slots in batched buckets, then tick decode.  Returned stats
+        free slots in batched buckets (FIFO; paged mode backpressures the
+        head when the block pool is short), then tick.  Returned stats
         cover THIS call only (``Engine.metrics`` keeps lifetime totals)."""
         pending = list(requests)
         start = replace(self.metrics)
         t0 = time.time()
         ticks = 0
-        while (pending or self.active) and ticks < max_ticks:
+        while (pending or self.active or self._chunked) \
+                and ticks < max_ticks:
             free = [s for s, r in enumerate(self.slots) if r is None]
-            if pending and free:
-                n = min(len(pending), len(free))
-                batch, pending = pending[:n], pending[n:]
-                self._admit(batch, free[:n])
+            batch, batch_slots = [], []
+            while pending and free:
+                req = pending[0]
+                self._validate(req)
+                if not self._reserve(req, free[0]):
+                    break          # head-of-line: wait for blocks to free
+                pending.pop(0)
+                slot = free.pop(0)
+                if self._chunkable(len(req.prompt)):
+                    self._start_chunked(req, slot)
+                else:
+                    batch.append(req)
+                    batch_slots.append(slot)
+            if batch:
+                self._admit(batch, batch_slots)
             self.step()
             ticks += 1
         stats = self.metrics.since(start).summary(self.max_batch)

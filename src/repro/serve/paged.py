@@ -1,0 +1,59 @@
+"""Host-side block accounting for the paged KV cache.
+
+The engine's cache slab becomes a pool of ``num_blocks`` fixed-size blocks
+of ``block_size`` tokens each.  A request owns only the blocks its
+prompt + generation budget needs; freeing a slot returns its blocks to the
+pool (no full ``max_seq`` row rewrites).  The device-side gather/scatter
+lives in ``repro.models.common`` (:func:`paged_gather` /
+:func:`paged_write`); this module is the pure-python allocator the engine
+drives between jit calls.
+
+Physical block 0 is reserved as the *garbage block*: free decode lanes and
+unreserved block-table entries point at it, so every lane always has a
+legal write target and reads from it are masked by the per-row ``kv_len``.
+"""
+from __future__ import annotations
+
+GARBAGE_BLOCK = 0
+
+
+def blocks_needed(prompt_len: int, max_new: int, max_seq: int,
+                  block_size: int) -> int:
+    """Blocks a request needs for its whole lifetime (prompt + decode),
+    reserved at admission so decode can never run out mid-request."""
+    return -(-min(prompt_len + max_new, max_seq) // block_size)
+
+
+class BlockAllocator:
+    """Free-list over ``num_blocks`` blocks; block 0 is never handed out."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError(f"need >= 2 blocks (one is the reserved garbage "
+                             f"block), got {num_blocks}")
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        # LIFO free list; block 0 (garbage) is never in it
+        self._free = list(range(num_blocks - 1, GARBAGE_BLOCK, -1))
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.num_blocks - 1 - len(self._free)
+
+    def alloc(self, n: int) -> list[int] | None:
+        """Pop ``n`` blocks, or None (and no change) if the pool is short."""
+        if n < 0 or n > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def release(self, blocks: list[int]) -> None:
+        for b in blocks:
+            assert GARBAGE_BLOCK < b < self.num_blocks, b
+            assert b not in self._free, f"double free of block {b}"
+            self._free.append(b)

@@ -1,8 +1,11 @@
 """Token sampling for the serving engine: greedy / temperature / top-k.
 
 Pure-functional and jit-friendly: ``sample`` maps (logits, key) -> token ids
-with static shapes, so the engine threads one PRNG key through the whole
-serve loop and every run with the same seed is bit-reproducible.
+with static shapes.  When the caller passes per-row ``rids``/``steps``, each
+row draws from its own PRNG stream ``fold_in(fold_in(key, rid), step)`` —
+a request's sampled tokens are then a function of (engine seed, rid, step)
+only, independent of its slot index, its co-tenants, and the scheduling
+order (mixed-batch == sequential for every sampling mode).
 """
 from __future__ import annotations
 
@@ -35,15 +38,23 @@ class SamplingConfig:
             raise ValueError("top_k mode needs top_k >= 1")
 
 
-def sample(logits: jax.Array, key: jax.Array, cfg: SamplingConfig
-           ) -> jax.Array:
+def per_request_keys(key: jax.Array, rids: jax.Array, steps: jax.Array
+                     ) -> jax.Array:
+    """One PRNG key per row: ``fold_in(fold_in(key, rid), step)``."""
+    def one(rid, step):
+        return jax.random.fold_in(jax.random.fold_in(key, rid), step)
+    return jax.vmap(one)(rids, steps)
+
+
+def sample(logits: jax.Array, key: jax.Array, cfg: SamplingConfig,
+           *, rids: jax.Array | None = None,
+           steps: jax.Array | None = None) -> jax.Array:
     """logits: (B, V) -> (B,) int32 next-token ids.
 
-    One key samples the whole batch (``jax.random.categorical`` is
-    vectorized over leading axes).  Determinism is per serve run: a fixed
-    engine seed replays the identical schedule bit-for-bit, but a request's
-    stream DOES depend on its slot index and co-tenants (the per-row noise
-    is a function of row position in the batch).
+    Without ``rids``, one key samples the whole batch row-wise (legacy: a
+    request's stream then depends on its slot and co-tenants).  With
+    ``rids``/``steps`` (both (B,) int32), every row samples from its own
+    per-request stream, reproducible regardless of scheduling.
     """
     if cfg.mode == "greedy":
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -52,4 +63,10 @@ def sample(logits: jax.Array, key: jax.Array, cfg: SamplingConfig
         k = min(cfg.top_k, logits.shape[-1])
         kth = jax.lax.top_k(logits, k)[0][..., -1:]       # (B, 1)
         logits = jnp.where(logits >= kth, logits, -jnp.inf)
-    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+    if rids is None:
+        return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+    assert steps is not None, "per-request sampling needs rids AND steps"
+    keys = per_request_keys(key, jnp.asarray(rids, jnp.int32),
+                            jnp.asarray(steps, jnp.int32))
+    toks = jax.vmap(lambda k_, l: jax.random.categorical(k_, l))(keys, logits)
+    return toks.astype(jnp.int32)

@@ -1,9 +1,11 @@
 """Continuous-batching engine: mixed-depth correctness + sampling.
 
-The load-bearing test: requests with DIFFERENT prompt lengths served
-concurrently on one slab must emit token-identical output to serving each
-request alone (greedy) — this pins the per-slot decode-position fix (the
-seed engine decoded every row at the single shared ``positions.max()``).
+The load-bearing tests:
+  * requests with DIFFERENT prompt lengths served concurrently on one slab
+    must emit token-identical output to serving each request alone — for
+    greedy AND sampled modes (per-request PRNG streams);
+  * the paged-block KV cache and chunked prefill must be token-identical to
+    the dense-slab reference oracle in every combination.
 """
 import jax
 import jax.numpy as jnp
@@ -12,6 +14,7 @@ import pytest
 
 from repro.models.registry import get_config, get_model
 from repro.serve.engine import Engine, Request
+from repro.serve.paged import BlockAllocator, blocks_needed
 from repro.serve.sampling import SamplingConfig, sample
 
 MIXED_LENS = (3, 9, 5, 17, 2)
@@ -29,11 +32,15 @@ def _prompts(cfg, lens=MIXED_LENS):
     return [rng.integers(1, cfg.vocab_size, n).tolist() for n in lens]
 
 
-def _sequential_reference(cfg, params, prompts, max_new, max_seq=48):
+def _sequential_reference(cfg, params, prompts, max_new, max_seq=48,
+                          sampling=None, seed=0, rids=None):
+    """Each request served alone — same rid as in the batched run, so the
+    per-request sampling streams line up."""
     outs = []
-    for p in prompts:
-        eng = Engine(cfg, params, max_batch=1, max_seq=max_seq)
-        req = Request(rid=0, prompt=p, max_new=max_new)
+    for i, p in enumerate(prompts):
+        eng = Engine(cfg, params, max_batch=1, max_seq=max_seq,
+                     sampling=sampling, seed=seed)
+        req = Request(rid=rids[i] if rids else i, prompt=p, max_new=max_new)
         assert eng.serve([req])["done"]
         outs.append(req.out)
     return outs
@@ -83,6 +90,213 @@ def test_mixed_length_batch_recurrent_families(arch):
         assert req.out == expect
 
 
+# ---------------------------------------------------------------------------
+# paged-block KV cache + chunked prefill vs the dense reference oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["yi-9b", "deepseek-v2-lite-16b"])
+def test_paged_matches_dense_mixed_lengths(arch):
+    """The tentpole acceptance criterion: the paged engine is
+    token-identical to the dense-slab engine on a mixed-length greedy
+    workload with slot reuse (yi-9b: GQA pools; deepseek-v2-lite: MLA
+    compressed pools)."""
+    cfg, params = _setup(arch)
+    prompts = _prompts(cfg)
+    outs = {}
+    for paged in (False, True):
+        eng = Engine(cfg, params, max_batch=3, max_seq=48, paged=paged,
+                     block_size=8)
+        reqs = [Request(rid=i, prompt=p, max_new=6)
+                for i, p in enumerate(prompts)]
+        assert eng.serve(reqs)["done"]
+        outs[paged] = [r.out for r in reqs]
+    assert outs[True] == outs[False]
+
+
+def test_chunked_prefill_matches_whole_prompt():
+    """A max_seq-1 prompt admitted in prefill_chunk pieces (dense and
+    paged) == the same prompt prefilled whole."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(1, cfg.vocab_size, n).tolist()
+               for n in (31, 4, 12)]          # 31 == max_seq - 1
+    outs = {}
+    for mode, kw in {
+        "whole": {},
+        "chunked": {"prefill_chunk": 8},
+        "paged_chunked": {"prefill_chunk": 8, "paged": True,
+                          "block_size": 8},
+    }.items():
+        eng = Engine(cfg, params, max_batch=2, max_seq=32, **kw)
+        reqs = [Request(rid=i, prompt=p, max_new=5)
+                for i, p in enumerate(prompts)]
+        stats = eng.serve(reqs)
+        assert stats["done"]
+        if mode != "whole":
+            assert stats["prefill_chunks"] >= 4     # 31 tokens / 8-chunks
+        outs[mode] = [r.out for r in reqs]
+    assert outs["chunked"] == outs["whole"]
+    assert outs["paged_chunked"] == outs["whole"]
+
+
+def test_chunked_prefill_interleaves_decode():
+    """While a long admission is mid-flight, every engine tick still
+    advances active decodes — one token per tick, i.e. a tick never waits
+    on more than one chunk of prefill work."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(4)
+    eng = Engine(cfg, params, max_batch=2, max_seq=48, prefill_chunk=8)
+    short = Request(rid=0, prompt=[5, 6, 7], max_new=30)
+    assert eng.submit(short)
+    long = Request(rid=1,
+                   prompt=rng.integers(1, cfg.vocab_size, 20).tolist(),
+                   max_new=4)
+    assert eng.submit(long)                  # starts a chunked admission
+    assert long.out == []                    # no prefill ran yet
+    ticks = 0
+    while not long.out:                      # 20 tokens / 8 -> 3 pieces
+        emitted = len(short.out)
+        eng.step()
+        ticks += 1
+        assert len(short.out) == emitted + 1, \
+            f"decode stalled during chunked admission at tick {ticks}"
+    assert ticks == 3
+    # and the interleaved result still matches the sequential reference
+    while eng.active:
+        eng.step()
+    ref = _sequential_reference(cfg, params, [long.prompt], max_new=4,
+                                rids=[1])
+    assert long.out == ref[0]
+
+
+def test_max_new_one_emits_exactly_one_token():
+    """Bugfix pin: max_new=1 must emit exactly the prefill-sampled token
+    (the v2 engine appended a second from the next decode tick), and the
+    slot must be free for the next request immediately."""
+    cfg, params = _setup()
+    for kw in ({}, {"paged": True, "block_size": 8}):
+        eng = Engine(cfg, params, max_batch=1, max_seq=48, **kw)
+        req = Request(rid=0, prompt=[3, 1, 4], max_new=1)
+        stats = eng.serve([req])
+        assert stats["done"]
+        assert len(req.out) == 1, req.out
+        assert eng.slots == [None] and not eng.active
+        if eng.paged:
+            assert eng.allocator.used_blocks == 0
+        assert eng.submit(Request(rid=1, prompt=[1, 5], max_new=1))
+
+
+def test_prompt_at_max_seq_boundary():
+    """Prompt length exactly max_seq - 1 admits, emits, and terminates on
+    the position cap without touching columns past the cache end."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(1, cfg.vocab_size, 31).tolist()
+    for kw in ({}, {"paged": True, "block_size": 8}):
+        eng = Engine(cfg, params, max_batch=1, max_seq=32, **kw)
+        req = Request(rid=0, prompt=prompt, max_new=8)
+        stats = eng.serve([req])
+        assert stats["done"]
+        assert len(req.out) == 2             # prefill token + 1 decode step
+    with pytest.raises(ValueError):          # max_seq-long prompt: rejected
+        Engine(cfg, params, max_batch=1, max_seq=32).submit(
+            Request(rid=1, prompt=rng.integers(1, 9, 32).tolist()))
+
+
+def test_slot_reuse_no_stale_state():
+    """A slot freed by a long request must not leak positions/blocks into
+    its next (shorter) tenant: run long-then-short through a 1-slot engine
+    and compare against a fresh engine."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(6)
+    long_p = rng.integers(1, cfg.vocab_size, 20).tolist()
+    short_p = rng.integers(1, cfg.vocab_size, 4).tolist()
+    for kw in ({}, {"paged": True, "block_size": 8}):
+        eng = Engine(cfg, params, max_batch=1, max_seq=48, **kw)
+        first = Request(rid=0, prompt=long_p, max_new=6)
+        assert eng.serve([first])["done"]
+        second = Request(rid=1, prompt=short_p, max_new=6)
+        assert eng.serve([second])["done"]
+        ref = _sequential_reference(cfg, params, [short_p], max_new=6,
+                                    rids=[1])
+        assert second.out == ref[0], kw
+
+
+def test_paged_backpressure_full_pool():
+    """With a pool that fits ~one request, pending requests wait for blocks
+    and still run to completion; submit() reports False meanwhile."""
+    cfg, params = _setup()
+    prompts = _prompts(cfg, lens=(5, 4, 6))
+    eng = Engine(cfg, params, max_batch=3, max_seq=48, paged=True,
+                 block_size=8, num_blocks=3)      # 2 usable blocks
+    reqs = [Request(rid=i, prompt=p, max_new=6)
+            for i, p in enumerate(prompts)]
+    assert eng.submit(reqs[0])
+    assert not eng.submit(reqs[1])           # slots free, blocks are not
+    stats = eng.serve(reqs[1:])
+    assert stats["done"] and reqs[0].done
+    ref = _sequential_reference(cfg, params, prompts, max_new=6)
+    assert [r.out for r in reqs] == ref
+    assert eng.allocator.used_blocks == 0    # everything returned
+
+
+def test_submit_on_full_engine():
+    cfg, params = _setup()
+    eng = Engine(cfg, params, max_batch=1, max_seq=48)
+    assert eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new=8))
+    assert not eng.submit(Request(rid=1, prompt=[4, 5], max_new=2))
+
+
+def test_paged_rejects_recurrent_and_oversized():
+    cfg, params = _setup("mamba2-1.3b")
+    with pytest.raises(ValueError):
+        Engine(cfg, params, max_batch=1, max_seq=32, paged=True)
+    with pytest.raises(ValueError):
+        Engine(cfg, params, max_batch=1, max_seq=32, prefill_chunk=8)
+    cfg2, params2 = _setup()
+    eng = Engine(cfg2, params2, max_batch=1, max_seq=64, paged=True,
+                 block_size=8, num_blocks=4)
+    with pytest.raises(ValueError):          # needs more blocks than exist
+        eng.submit(Request(rid=0, prompt=list(range(1, 40)), max_new=16))
+
+
+def test_block_allocator():
+    a = BlockAllocator(5, 4)
+    assert a.free_blocks == 4                # block 0 reserved
+    got = a.alloc(3)
+    assert len(got) == 3 and 0 not in got
+    assert a.alloc(2) is None and a.free_blocks == 1
+    a.release(got)
+    assert a.free_blocks == 4 and a.used_blocks == 0
+    assert blocks_needed(5, 6, 48, 8) == 2   # ceil(11 / 8)
+    assert blocks_needed(31, 8, 32, 8) == 4  # capped at max_seq
+
+
+# ---------------------------------------------------------------------------
+# sampling
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode,kw", [
+    ("temperature", {"temperature": 0.7}),
+    ("top_k", {"top_k": 8, "temperature": 0.7}),
+])
+def test_sampled_mixed_batch_matches_sequential(mode, kw):
+    """Bugfix pin: per-request PRNG streams make sampled output independent
+    of slot index and co-tenants — mixed-batch == sequential holds for the
+    sampled modes, not just greedy."""
+    cfg, params = _setup()
+    prompts = _prompts(cfg)
+    sc = SamplingConfig(mode=mode, **kw)
+    eng = Engine(cfg, params, max_batch=3, max_seq=48, sampling=sc, seed=11)
+    reqs = [Request(rid=i, prompt=p, max_new=6)
+            for i, p in enumerate(prompts)]
+    assert eng.serve(reqs)["done"]
+    ref = _sequential_reference(cfg, params, prompts, max_new=6,
+                                sampling=sc, seed=11)
+    for i, (req, expect) in enumerate(zip(reqs, ref)):
+        assert req.out == expect, (mode, i, req.out, expect)
+
+
 def test_sampling_determinism_fixed_key():
     """Same seed -> identical sampled streams; different seed -> (almost
     surely) different ones."""
@@ -123,6 +337,30 @@ def test_sample_modes():
     with pytest.raises(ValueError):
         SamplingConfig(mode="top_k", top_k=4, temperature=0.0)
 
+
+def test_sample_per_request_stream_slot_invariant():
+    """The same (rid, step) draws the same token wherever the row sits in
+    the batch; different rids draw independent streams."""
+    key = jax.random.PRNGKey(0)
+    rng = np.random.default_rng(0)
+    logits_row = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+    cfg = SamplingConfig(mode="temperature", temperature=1.0)
+    batch = jnp.stack([logits_row, logits_row + 1.0, logits_row])
+    t1 = sample(batch, key, cfg, rids=jnp.asarray([7, 1, 2]),
+                steps=jnp.asarray([3, 0, 0]))
+    t2 = sample(batch[::-1], key, cfg, rids=jnp.asarray([2, 1, 7]),
+                steps=jnp.asarray([0, 0, 3]))
+    assert int(t1[0]) == int(t2[2])          # rid 7 step 3, slots 0 vs 2
+    assert int(t1[2]) == int(t2[0])          # rid 2 step 0
+    draws = {int(sample(batch, key, cfg, rids=jnp.asarray([7, 1, 2]),
+                        steps=jnp.asarray([s, 0, 0]))[0])
+             for s in range(16)}
+    assert len(draws) > 1                    # steps advance the stream
+
+
+# ---------------------------------------------------------------------------
+# metrics / bookkeeping
+# ---------------------------------------------------------------------------
 
 def test_engine_metrics_and_bucketing():
     """Bucketed prefill: one jit call admits same-bucket prompts together;
