@@ -1,0 +1,114 @@
+"""Bench-regression gate: diff BENCH_engine.json against a committed
+baseline and fail on throughput regressions.
+
+Every numeric ``*_tok_s`` leaf of the two JSON trees is compared; a leaf
+that drops more than ``--threshold`` (default 25%) below the baseline is a
+regression and exits 1.  Leaves new in the current run are reported but
+never fail (the baseline catches up at the next refresh); leaves MISSING
+from the current run fail — a silently dropped scenario is how a gate goes
+dark.  A markdown delta table is printed (append to ``$GITHUB_STEP_SUMMARY``
+via ``--summary`` in CI).
+
+Local repro / baseline refresh:
+
+  PYTHONPATH=src python benchmarks/run.py --smoke      # writes BENCH_engine.json
+  python benchmarks/compare.py                         # gate against baseline
+  cp BENCH_engine.json BENCH_baseline.json             # refresh (commit it)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+GATED_SUFFIX = "_tok_s"          # gate throughputs; occupancy etc. is FYI
+
+
+def _leaves(tree, prefix=""):
+    """Flatten a JSON tree to {dotted.path: number} for gated leaves."""
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_leaves(v, f"{prefix}.{k}" if prefix else str(k)))
+    elif isinstance(tree, (int, float)) and prefix.endswith(GATED_SUFFIX):
+        out[prefix] = float(tree)
+    return out
+
+
+def compare(baseline: dict, current: dict, threshold: float):
+    """Returns (rows, regressions, missing): rows are
+    (path, base, cur, delta_frac | None, status) sorted worst-first."""
+    base = _leaves(baseline)
+    cur = _leaves(current)
+    rows, regressions, missing = [], [], []
+    for path in sorted(set(base) | set(cur)):
+        b, c = base.get(path), cur.get(path)
+        if b is None:
+            rows.append((path, None, c, None, "new"))
+            continue
+        if c is None:
+            rows.append((path, b, None, None, "MISSING"))
+            missing.append(path)
+            continue
+        delta = (c - b) / b if b > 0 else 0.0
+        status = "ok"
+        if delta < -threshold:
+            status = "REGRESSION"
+            regressions.append(path)
+        rows.append((path, b, c, delta, status))
+    rows.sort(key=lambda r: (r[3] is None, r[3] if r[3] is not None else 0.0))
+    return rows, regressions, missing
+
+
+def markdown_table(rows, threshold: float) -> str:
+    def fmt(v):
+        return "—" if v is None else f"{v:,.1f}"
+
+    lines = [f"### Bench regression gate (fail < -{threshold:.0%})", "",
+             "| metric | baseline tok/s | current tok/s | delta | status |",
+             "|---|---:|---:|---:|---|"]
+    for path, b, c, delta, status in rows:
+        d = "—" if delta is None else f"{delta:+.1%}"
+        mark = {"REGRESSION": "❌", "MISSING": "❌", "new": "🆕"}.get(
+            status, "✅")
+        lines.append(f"| `{path}` | {fmt(b)} | {fmt(c)} | {d} "
+                     f"| {mark} {status} |")
+    return "\n".join(lines) + "\n"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--current", default="BENCH_engine.json")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max tolerated fractional drop (0.25 = 25%%)")
+    ap.add_argument("--summary", default=None,
+                    help="file to append the markdown table to "
+                    "(e.g. $GITHUB_STEP_SUMMARY)")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+
+    rows, regressions, missing = compare(baseline, current, args.threshold)
+    table = markdown_table(rows, args.threshold)
+    print(table)
+    if args.summary:
+        with open(args.summary, "a") as f:
+            f.write(table)
+
+    if regressions or missing:
+        for p in regressions:
+            print(f"FAIL: {p} regressed more than {args.threshold:.0%}",
+                  file=sys.stderr)
+        for p in missing:
+            print(f"FAIL: {p} missing from the current run", file=sys.stderr)
+        sys.exit(1)
+    print(f"gate OK: {sum(1 for r in rows if r[4] == 'ok')} metrics within "
+          f"{args.threshold:.0%} of baseline")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,7 @@
 """Serving-engine benchmarks: decode throughput vs slab width, batched
 (bucketed) prefill vs per-row prefill, paged-block KV vs the dense slab,
-and chunked-prefill interleave under a long-prompt admission.
+and chunked-prefill interleave under a long-prompt admission — for the
+attention AND recurrent (ssm/hybrid, state-continuing SSD scan) families.
 
 Prints the orchestrator's ``name,us_per_call,derived`` CSV rows.  Timings on
 CPU are correctness-level; the derived column carries the quantities that
@@ -24,14 +25,15 @@ if _SRC not in sys.path:
 DEF_BATCHES = (1, 8, 32)
 
 
-def _build(quant: str, max_batch: int, max_seq: int, **engine_kw):
+def _build(quant: str, max_batch: int, max_seq: int, arch: str = "yi-9b",
+           **engine_kw):
     import jax
 
     from repro.core.layers import QuantConfig
     from repro.models.registry import get_config, get_model
     from repro.serve.engine import Engine
 
-    cfg = get_config("yi-9b").reduced()
+    cfg = get_config(arch).reduced()
     if quant != "bf16":
         from dataclasses import replace
         cfg = replace(cfg, quant=QuantConfig(mode=quant))
@@ -153,22 +155,19 @@ def prefill_batched_vs_per_row(quant: str = "bf16", batch: int = 8,
     return {"per_row_s": per_row, "batched_s": batched, "speedup": speedup}
 
 
-def long_prompt_interleave(quant: str = "bf16", max_seq: int = 128,
-                           chunk: int = 16) -> dict:
-    """Admit a (max_seq-1)-token prompt while 3 slots decode.
-
-    Whole-prompt admission stalls every decoder for the full prefill;
-    chunked admission interleaves — the decoders keep emitting one token
-    per tick.  Reports decode tokens emitted during the admission window.
-    """
+def _admit_long_interleave(quant: str, max_seq: int, chunk: int, arch: str,
+                           modes, tag: str = "") -> dict:
+    """Shared harness: 3 short requests decode while one (max_seq-1)-token
+    prompt is admitted; reports decode tokens emitted during the admission
+    window per mode (whole-prompt admission stalls every decoder for the
+    full prefill; chunked admission interleaves one chunk per tick)."""
     import numpy as np
 
     from repro.serve.engine import Request
 
     rows = {}
-    for mode, kw in (("whole", {}),
-                     ("chunked", {"prefill_chunk": chunk})):
-        cfg, eng = _build(quant, 4, max_seq, **kw)
+    for mode, kw in modes:
+        cfg, eng = _build(quant, 4, max_seq, arch=arch, **kw)
         rng = np.random.default_rng(0)
         short = [Request(rid=i,
                          prompt=rng.integers(1, cfg.vocab_size, 6).tolist(),
@@ -190,10 +189,39 @@ def long_prompt_interleave(quant: str = "bf16", max_seq: int = 128,
         wall = time.perf_counter() - t0
         during = sum(len(r.out) for r in short) - emitted0
         rows[mode] = during
-        print(f"engine_admit_long_{mode},{wall * 1e6:.0f},"
+        print(f"engine_admit_long_{tag}{mode},{wall * 1e6:.0f},"
               f"decode_toks_during_admission={during};len={max_seq - 1};"
-              f"chunk={chunk if mode == 'chunked' else 0}")
+              f"chunk={0 if mode == 'whole' else chunk}")
     return rows
+
+
+def long_prompt_interleave(quant: str = "bf16", max_seq: int = 128,
+                           chunk: int = 16) -> dict:
+    """Attention-family long-admission interleave (yi-9b): whole vs
+    chunked prefill."""
+    return _admit_long_interleave(
+        quant, max_seq, chunk, "yi-9b",
+        [("whole", {}), ("chunked", {"prefill_chunk": chunk})])
+
+
+def recurrent_long_prompt_interleave(quant: str = "bf16", max_seq: int = 64,
+                                     chunk: int = 16,
+                                     archs=("mamba2-1.3b", "zamba2-1.2b")
+                                     ) -> dict:
+    """The recurrent-family spelling of :func:`long_prompt_interleave`:
+    chunked admission resumes the state-continuing SSD scan one chunk per
+    tick; the hybrid additionally runs its attention leaves in the paged
+    block pool (split substrate)."""
+    out = {}
+    for arch in archs:
+        modes = [("whole", {}), ("chunked", {"prefill_chunk": chunk})]
+        if arch == "zamba2-1.2b":
+            modes.append(("paged_chunked",
+                          {"prefill_chunk": chunk, "paged": True,
+                           "block_size": 16}))
+        out[arch] = _admit_long_interleave(quant, max_seq, chunk, arch,
+                                           modes, tag=f"{arch}_")
+    return out
 
 
 def bench_json(path: str = "BENCH_engine.json", batches=DEF_BATCHES,
@@ -201,14 +229,17 @@ def bench_json(path: str = "BENCH_engine.json", batches=DEF_BATCHES,
                quant: str = "bf16") -> dict:
     """Machine-readable engine numbers for the perf trajectory: decode
     tok/s, prefill tok/s and occupancy per slab width, via a short serve()
-    of 2*mb mixed-length requests after a steady-state decode measurement.
+    of 2*mb mixed-length requests after a steady-state decode measurement;
+    plus a ``recurrent`` section — ssm/hybrid engines serving a
+    long-prompt-interleave mix under chunked prefill (the hybrid with paged
+    attention pools), gated by ``benchmarks/compare.py`` in CI.
     """
     import numpy as np
 
     from repro.serve.engine import Request
 
     out = {"quant": quant, "max_seq": max_seq, "ticks": ticks,
-           "per_batch": {}}
+           "per_batch": {}, "recurrent": {}}
     for mb in batches:
         cfg, eng = _build(quant, mb, max_seq)
         decode_tok_s = _steady_decode_tok_s(eng, cfg, mb, ticks, max_seq)
@@ -229,6 +260,28 @@ def bench_json(path: str = "BENCH_engine.json", batches=DEF_BATCHES,
         print(f"engine_json_b{mb},0,decode_tok_s={decode_tok_s:.1f};"
               f"prefill_tok_s={stats['prefill_tok_s']:.1f};"
               f"occupancy={stats['occupancy']:.2f}")
+    for arch, kw in (("mamba2-1.3b", {"prefill_chunk": 16}),
+                     ("zamba2-1.2b", {"prefill_chunk": 16, "paged": True,
+                                      "block_size": 16})):
+        cfg, eng = _build(quant, 4, max_seq, arch=arch, **kw)
+        rng = np.random.default_rng(2)
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(
+                            1, cfg.vocab_size,
+                            int(rng.integers(3, max_seq - 2))).tolist(),
+                        max_new=6)
+                for i in range(8)]              # mixes whole + chunked
+        stats = eng.serve(reqs)
+        assert stats["done"] and stats["prefill_chunks"] > 0
+        out["recurrent"][arch] = {
+            "decode_tok_s": stats["decode_tok_s"],
+            "prefill_tok_s": stats["prefill_tok_s"],
+            "occupancy": stats["occupancy"],
+        }
+        print(f"engine_json_recurrent_{arch},0,"
+              f"decode_tok_s={stats['decode_tok_s']:.1f};"
+              f"prefill_tok_s={stats['prefill_tok_s']:.1f};"
+              f"chunks={stats['prefill_chunks']}")
     with open(path, "w") as f:
         json.dump(out, f, indent=2)
     print(f"engine_json,0,wrote={path}")
@@ -237,15 +290,18 @@ def bench_json(path: str = "BENCH_engine.json", batches=DEF_BATCHES,
 
 def smoke() -> None:
     """Tiny CI-sized run: decode at b in (1, 4), prefill comparison, paged
-    parity and the long-prompt interleave at reduced sizes."""
+    parity and the long-prompt interleaves (attention AND recurrent
+    families) at reduced sizes."""
     decode_throughput(batches=(1, 4), ticks=6, max_seq=64)
     prefill_batched_vs_per_row(batch=4, prompt_len=12, max_seq=64, iters=1)
     decode_paged_vs_dense(batch=4, ticks=6, max_seq=64)
     long_prompt_interleave(max_seq=64, chunk=16)
+    recurrent_long_prompt_interleave(max_seq=48, chunk=16,
+                                     archs=("mamba2-1.3b",))
 
 
 ALL = [decode_throughput, decode_paged_vs_dense, prefill_batched_vs_per_row,
-       long_prompt_interleave]
+       long_prompt_interleave, recurrent_long_prompt_interleave]
 
 
 def main() -> None:
@@ -276,6 +332,7 @@ def main() -> None:
         ok = False
     res = prefill_batched_vs_per_row(args.quant, args.prefill_batch)
     long_prompt_interleave(quant=args.quant)
+    recurrent_long_prompt_interleave(quant=args.quant)
     if args.json:
         bench_json(args.json, quant=args.quant)
     if res["speedup"] <= 1.0:

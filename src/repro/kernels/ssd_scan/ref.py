@@ -6,17 +6,25 @@ import jax.numpy as jnp
 
 
 def ssd_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
-            c: jax.Array):
+            c: jax.Array, initial_state: jax.Array | None = None,
+            mask: jax.Array | None = None):
     """Sequential state-space recurrence, one token at a time.
 
     x: (BH, S, P); dt: (BH, S); a: (BH,); b/c: (BH, S, N).
     y_t = C_t^T S_t;  S_t = exp(dt_t a) S_{t-1} + dt_t B_t x_t^T.
+    ``initial_state``: optional (BH, N, P) carried state (zeros when None);
+    ``mask``: optional (BH, S) validity mask — invalid positions leave the
+    state untouched (dt zeroed).
     Returns (y (BH,S,P), final_state (BH,N,P)).
     """
     bh, s, p = x.shape
     n = b.shape[-1]
+    if mask is not None:
+        dt = jnp.where(mask, dt, 0.0)
+    if initial_state is None:
+        initial_state = jnp.zeros((bh, n, p), jnp.float32)
 
-    def per_stream(xs, dts, aa, bs, cs):
+    def per_stream(xs, dts, aa, bs, cs, init):
         def step(state, inp):
             x_t, dt_t, b_t, c_t = inp
             decay = jnp.exp(dt_t * aa)
@@ -24,10 +32,10 @@ def ssd_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
             y_t = c_t @ state                       # (P,)
             return state, y_t
 
-        init = jnp.zeros((n, p), jnp.float32)
         final, ys = jax.lax.scan(step, init, (xs, dts, bs, cs))
         return ys, final
 
     return jax.vmap(per_stream)(x.astype(jnp.float32), dt.astype(jnp.float32),
                                 a.astype(jnp.float32), b.astype(jnp.float32),
-                                c.astype(jnp.float32))
+                                c.astype(jnp.float32),
+                                initial_state.astype(jnp.float32))

@@ -12,6 +12,12 @@ SSD pieces entirely in VMEM:
 Q defaults to 128 (MXU-aligned); the (Q,Q) decay mask is built with iota.
 This turns the per-layer SSD from ~7 jnp einsums with HBM round-trips into
 one VMEM-resident kernel — the hot loop of mamba2-1.3b / zamba2-1.2b.
+
+The scan is RESUMABLE: an optional (BH, N, P) ``initial_state`` seeds the
+VMEM state at chunk 0 (instead of zeros) and the continued final state is
+returned, and an optional (BH, S) validity ``mask`` makes right-padded
+positions inert — together these let chunked/bucketed prefill feed a prompt
+in pieces with exact state carry (see ``serve.engine``).
 """
 from __future__ import annotations
 
@@ -23,13 +29,13 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, fs_ref,
+def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, s0_ref, y_ref, fs_ref,
                 state_ref, *, nc: int, q: int):
     ic = pl.program_id(1)
 
     @pl.when(ic == 0)
     def _init():
-        state_ref[...] = jnp.zeros_like(state_ref)
+        state_ref[...] = s0_ref[0].astype(jnp.float32)
 
     x = x_ref[0].astype(jnp.float32)          # (Q, P)
     dt = dt_ref[0].astype(jnp.float32)        # (Q, 1)
@@ -74,16 +80,24 @@ def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, fs_ref,
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
              c: jax.Array, *, chunk: int = 128,
-             interpret: bool = False):
+             interpret: bool = False, initial_state=None, mask=None):
     """SSD over flattened head-streams.
 
     x: (BH, S, P); dt: (BH, S); a: (BH,) negative decay rates;
-    b/c: (BH, S, N).  Returns (y (BH, S, P) f32, final_state (BH, N, P)).
+    b/c: (BH, S, N).  ``initial_state``: optional (BH, N, P) carried state
+    to continue from (zeros when None); ``mask``: optional (BH, S) validity
+    mask — invalid positions are inert (dt is zeroed: the state freezes
+    through them), so right-padded streams carry exactly their real tokens.
+    Returns (y (BH, S, P) f32, final_state (BH, N, P)).
     """
     bh, s, p = x.shape
     n = b.shape[-1]
     assert s % chunk == 0, (s, chunk)
     nc = s // chunk
+    if mask is not None:
+        dt = jnp.where(mask, dt, 0.0)
+    if initial_state is None:
+        initial_state = jnp.zeros((bh, n, p), jnp.float32)
 
     y, fs = pl.pallas_call(
         functools.partial(_ssd_kernel, nc=nc, q=chunk),
@@ -94,6 +108,7 @@ def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
             pl.BlockSpec((1, chunk, n), lambda i, ic: (i, ic, 0)),
             pl.BlockSpec((1, chunk, n), lambda i, ic: (i, ic, 0)),
             pl.BlockSpec((1, 1), lambda i, ic: (i, 0)),
+            pl.BlockSpec((1, n, p), lambda i, ic: (i, 0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, chunk, p), lambda i, ic: (i, ic, 0)),
@@ -105,5 +120,6 @@ def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
         ],
         scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
         interpret=interpret,
-    )(x, dt[..., None], b, c, a[:, None])
+    )(x, dt[..., None], b, c, a[:, None],
+      initial_state.astype(jnp.float32))
     return y, fs

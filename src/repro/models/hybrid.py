@@ -54,7 +54,8 @@ class HybridLM:
             "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
         }
 
-    def _shared_attn(self, params, x, positions, cache, cache_index):
+    def _shared_attn(self, params, x, positions, cache, cache_index,
+                     block_table=None):
         cfg = self.cfg
         hc = cfg.hybrid
         p = params["shared"]
@@ -63,14 +64,15 @@ class HybridLM:
             positions=positions, cache=cache, cache_index=cache_index,
             num_heads=hc.shared_num_heads,
             num_kv_heads=hc.shared_num_kv_heads,
-            head_dim=cfg.d_model // hc.shared_num_heads)
+            head_dim=cfg.d_model // hc.shared_num_heads,
+            block_table=block_table)
         x = x + a
         f = mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg,
                 mlp_type="swiglu")
         return x + f, new_cache
 
     def forward(self, params, tokens, *, caches=None, cache_index=0,
-                training=False):
+                training=False, last_pos=None, block_tables=None):
         cfg = self.cfg
         hc = cfg.hybrid
         x = params["embed"][tokens]
@@ -87,7 +89,7 @@ class HybridLM:
             h = shard_hidden(h)
             y, new_cache = mamba2_block(
                 p_i["m"], rms_norm(h, p_i["ln"], cfg.norm_eps), cfg,
-                cache=cache_i)
+                cache=cache_i, last_pos=last_pos)
             return shard_hidden(h + y), new_cache
 
         if training and cfg.remat:
@@ -98,7 +100,8 @@ class HybridLM:
         layer0 = 0
         for g in range(self.num_groups):
             ac = attn_caches[g] if attn_caches is not None else None
-            x, nac = self._shared_attn(params, x, positions, ac, cache_index)
+            x, nac = self._shared_attn(params, x, positions, ac, cache_index,
+                                       block_table=block_tables)
             new_attn_caches.append(nac)
             n_in_group = min(hc.period, cfg.num_layers - layer0)
             p_g = jax.tree.map(lambda a: a[layer0:layer0 + n_in_group],
@@ -138,17 +141,20 @@ class HybridLM:
 
     def init_cache(self, batch: int, s_max: int, *, block_size=None,
                    num_blocks=None):
-        """Hybrid slots carry recurrent SSM state alongside the shared-block
-        KV caches — both stay dense per slot; the paged pool applies to the
-        pure-attention families only."""
-        if block_size is not None or num_blocks is not None:
-            raise ValueError("hybrid family keeps dense per-slot state; "
-                             "paged KV cache applies to attention slabs")
+        """SPLIT SUBSTRATE: with ``block_size``/``num_blocks`` the shared
+        attention block's KV leaves become paged pools
+        (num_blocks, block_size, Hkv, Dh) shared by all slots (one block
+        table per slot, reused by every group), while the recurrent SSM
+        state — O(1) per slot, nothing to page — stays dense (L, B, ...)."""
         cfg = self.cfg
         hc = cfg.hybrid
         dt = jnp.dtype(cfg.dtype)
         hd = cfg.d_model // hc.shared_num_heads
-        kv_shape = (batch, s_max, hc.shared_num_kv_heads, hd)
+        if block_size is not None:
+            assert num_blocks is not None, "paged cache needs num_blocks"
+            kv_shape = (num_blocks, block_size, hc.shared_num_kv_heads, hd)
+        else:
+            kv_shape = (batch, s_max, hc.shared_num_kv_heads, hd)
         attn_caches = [KVCache(jnp.zeros(kv_shape, dt),
                                jnp.zeros(kv_shape, dt))
                        for _ in range(self.num_groups)]
@@ -160,13 +166,14 @@ class HybridLM:
 
     def prefill(self, params, tokens, caches, *, last_pos=None,
                 cache_index=0):
-        """``cache_index`` must be 0: the mamba2 chunked scan restarts its
-        carried state per call (masked SSD scan pending — see ROADMAP)."""
-        if cache_index != 0:
-            raise ValueError("hybrid prefill is whole-prompt only "
-                             "(chunked prefill needs a masked SSD scan)")
+        """``last_pos``: (B,) per-row last REAL token of a right-padded
+        bucket — attention masks pad keys causally; the SSM layers mask
+        them out of the recurrent state (masked SSD scan).  ``cache_index``
+        > 0 continues a chunked prefill: attention writes the chunk at the
+        offset, the SSM scan resumes from the carried (conv, state)."""
         hidden, new_caches = self.forward(params, tokens, caches=caches,
-                                          cache_index=0)
+                                          cache_index=cache_index,
+                                          last_pos=last_pos)
         last = (hidden[:, -1:] if last_pos is None
                 else gather_last(hidden, last_pos))
         logits = quant_matmul(last, params["lm_head"], None)
@@ -175,9 +182,10 @@ class HybridLM:
     def decode_step(self, params, token, caches, index, block_tables=None):
         """``index``: scalar or (B,) per-row positions (attention caches
         honor per-row depths; the SSM state recurrence is position-free).
-        ``block_tables`` must be None (dense per-slot caches)."""
-        assert block_tables is None, "hybrid caches are dense (no block table)"
+        ``block_tables``: (B, nblk) int32 when the ATTENTION leaves are
+        paged pools (split substrate) — the SSM state is always dense."""
         hidden, new_caches = self.forward(params, token, caches=caches,
-                                          cache_index=index)
+                                          cache_index=index,
+                                          block_tables=block_tables)
         logits = quant_matmul(hidden, params["lm_head"], None)
         return logits, new_caches

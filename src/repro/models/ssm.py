@@ -51,10 +51,14 @@ def init_mamba2(key, cfg):
 
 
 def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
-                 state: jax.Array | None = None):
+                 state: jax.Array | None = None,
+                 last_pos: jax.Array | None = None):
     """Depthwise causal conv1d.  x: (B, S, C); w: (K, C).
 
     Returns (y, new_state) where state holds the last K-1 inputs.
+    ``last_pos``: optional (B,) index of each row's last REAL input
+    (right-padded batched prefill) — the state window is then gathered at
+    each row's own valid end, so pad columns never enter the carried state.
     """
     k = w.shape[0]
     if state is None:
@@ -63,19 +67,42 @@ def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
         pad = state.astype(x.dtype)
     xp = jnp.concatenate([pad, x], axis=1)              # (B, S+K-1, C)
     y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(k))
-    new_state = xp[:, -(k - 1):]
+    if last_pos is None:
+        new_state = xp[:, -(k - 1):]
+    else:
+        # row with valid length L: its state is the K-1 inputs before
+        # position L, i.e. xp[L : L+K-1] (xp[i] = input at position i-(K-1))
+        lengths = jnp.asarray(last_pos, jnp.int32) + 1
+        idx = lengths[:, None] + jnp.arange(k - 1)[None, :]
+        new_state = jnp.take_along_axis(xp, idx[..., None], axis=1)
     return jax.nn.silu(y + b[None, None]), new_state
 
 
-def _ssd_chunked(x, dt, A, B, C, chunk: int, unroll: bool = False):
+def _ssd_chunked(x, dt, A, B, C, chunk: int, unroll: bool = False,
+                 initial_state=None, mask=None):
     """x: (B,S,H,P); dt: (B,S,H); A: (H,) (negative); B/C: (B,S,G,N).
+
+    ``initial_state``: optional (B,H,P,N) carried state — the scan CONTINUES
+    from it (chunked prefill) instead of restarting from zeros.
+    ``mask``: optional (B,S) validity mask — invalid positions contribute
+    nothing to the state or to later valid outputs (dt is zeroed there:
+    decay exp(0*A) = 1 freezes the state and x*dt vanishes), so
+    right-padded rows carry exactly their real tokens' state.
 
     Returns (y (B,S,H,P), final_state (B,H,P,N)).
     """
     b, s, h, p = x.shape
     g, n = B.shape[2], B.shape[3]
-    assert s % chunk == 0, (s, chunk)
-    nc = s // chunk
+    if mask is not None:
+        dt = jnp.where(mask[..., None], dt, 0.0)
+    pad = -s % chunk
+    if pad:          # internal right-pad to the chunk grid; dt=0 is inert
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    nc = sp // chunk
     hg = h // g                                           # heads per group
 
     # reshape to chunks
@@ -113,25 +140,35 @@ def _ssd_chunked(x, dt, A, B, C, chunk: int, unroll: bool = False):
                      + jnp.einsum("bqh,bqhn,bqhp->bhpn", seg_end, Bh, xdt))
         return new_state, y_intra + y_inter
 
-    init = jnp.zeros((b, h, p, n), jnp.float32)
+    init = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+            else initial_state.astype(jnp.float32))
     if unroll:   # accounting mode: python loop (exact cost_analysis totals)
         state, ys = init, []
         for i in range(nc):
             state, y_i = chunk_step(
                 state, (xc[:, i], dtc[:, i], Bc[:, i], Cc[:, i]))
             ys.append(y_i)
-        return jnp.stack(ys, 1).reshape(b, s, h, p), state
+        return jnp.stack(ys, 1).reshape(b, sp, h, p)[:, :s], state
     xs_c = xc.transpose(1, 0, 2, 3, 4)                        # (NC,B,Q,H,P)
     dt_c = dtc.transpose(1, 0, 2, 3)
     B_s = Bc.transpose(1, 0, 2, 3, 4)
     C_s = Cc.transpose(1, 0, 2, 3, 4)
     final, ys = jax.lax.scan(chunk_step, init, (xs_c, dt_c, B_s, C_s))
-    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, sp, h, p)[:, :s]
     return y, final
 
 
-def mamba2_block(params, x: jax.Array, cfg, cache: SSMCache | None = None):
-    """x: (B, S, D) -> (y, new_cache).  S == 1 uses the decode recurrence."""
+def mamba2_block(params, x: jax.Array, cfg, cache: SSMCache | None = None,
+                 last_pos: jax.Array | None = None):
+    """x: (B, S, D) -> (y, new_cache).  S == 1 uses the decode recurrence.
+
+    Prefill (S > 1) CONTINUES the carried (conv, state) from ``cache`` —
+    fresh caches are zeros, so whole-prompt prefill is unchanged, and
+    chunked prefill feeds the prompt in pieces with exact state carry.
+    ``last_pos``: optional (B,) index of each row's last REAL token; pad
+    columns beyond it are masked out of the recurrent state (right-padded
+    length-bucketed prefill).
+    """
     sc = cfg.ssm
     d_inner, nheads, conv_ch = _dims(cfg)
     b, s, _ = x.shape
@@ -147,7 +184,8 @@ def mamba2_block(params, x: jax.Array, cfg, cache: SSMCache | None = None):
 
     conv_state = cache.conv if cache is not None else None
     xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"],
-                                 conv_state)
+                                 conv_state,
+                                 last_pos=last_pos if s > 1 else None)
     xs = xbc[..., :d_inner].reshape(b, s, nheads, sc.head_dim)
     B_ = xbc[..., d_inner:d_inner + gn].reshape(b, s, sc.num_groups,
                                                 sc.state_dim)
@@ -167,10 +205,16 @@ def mamba2_block(params, x: jax.Array, cfg, cache: SSMCache | None = None):
         y = y[:, None]                                       # (B,1,H,P)
         final_state = new_state
     else:
+        seq_mask = None
+        if last_pos is not None:
+            seq_mask = (jnp.arange(s)[None, :]
+                        <= jnp.asarray(last_pos, jnp.int32)[:, None])
         y, final_state = _ssd_chunked(
             xs.astype(jnp.float32), dt, A, B_.astype(jnp.float32),
             C_.astype(jnp.float32), min(sc.chunk_size, s),
-            unroll=not cfg.scan_layers)
+            unroll=not cfg.scan_layers,
+            initial_state=(cache.state if cache is not None else None),
+            mask=seq_mask)
         if cache is not None:
             final_state = final_state.astype(cache.state.dtype)
 

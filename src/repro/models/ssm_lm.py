@@ -30,7 +30,7 @@ class SSMLM:
         }
 
     def forward(self, params, tokens, *, caches=None, cache_index=0,
-                training=False):
+                training=False, last_pos=None):
         cfg = self.cfg
         from repro.parallel.act_sharding import shard_hidden
         x = params["embed"][tokens]
@@ -40,7 +40,7 @@ class SSMLM:
             h = shard_hidden(h)
             y, new_cache = mamba2_block(
                 p_i["m"], rms_norm(h, p_i["ln"], cfg.norm_eps), cfg,
-                cache=cache_i)
+                cache=cache_i, last_pos=last_pos)
             return shard_hidden(h + y), new_cache
 
         if training and cfg.remat:
@@ -84,13 +84,15 @@ class SSMLM:
 
     def prefill(self, params, tokens, caches, *, last_pos=None,
                 cache_index=0):
-        """``cache_index`` must be 0: the chunked SSD scan restarts its
-        carried state per call, so chunked/offset prefill would silently
-        drop pre-chunk history (needs the masked SSD scan — see ROADMAP)."""
-        if cache_index != 0:
-            raise ValueError("ssm prefill is whole-prompt only "
-                             "(chunked prefill needs a masked SSD scan)")
-        hidden, new_caches = self.forward(params, tokens, caches=caches)
+        """``last_pos``: (B,) index of each row's last REAL token — pad
+        columns of a right-padded length bucket are masked out of the
+        recurrent state (masked SSD scan + per-row conv-state gather).
+        ``cache_index`` > 0 means a chunked-prefill continuation: the SSM
+        recurrence is position-free, so the offset itself is unused — the
+        carried (conv, state) in ``caches`` IS the continuation point and
+        the scan resumes from it exactly."""
+        hidden, new_caches = self.forward(params, tokens, caches=caches,
+                                          last_pos=last_pos)
         last = (hidden[:, -1:] if last_pos is None
                 else gather_last(hidden, last_pos))
         logits = quant_matmul(last, params["lm_head"], None)

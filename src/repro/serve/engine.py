@@ -26,9 +26,18 @@ as the reference oracle):
 admitted in N-token pieces interleaved with decode ticks — each tick runs
 at most ONE chunk of prefill work before the decode step, so a
 ``max_seq``-long admission never stalls active decodes for more than one
-chunk's worth of compute.  Attention families only: the mamba2 SSD scan
-restarts its carried state per call, so recurrent/hybrid prompts still
-prefill whole (masked SSD scan — see ROADMAP).
+chunk's worth of compute.  All served families: attention chunks continue
+the staged KV cache at the write offset; the recurrent families resume the
+mamba2 SSD scan from the carried (conv, state) — the scan accepts an
+initial state and a pad-validity mask, so chunked and length-bucketed
+prefill are both token-identical to whole-prompt prefill.
+
+**Split substrate** (hybrid family, ``paged=True``): the shared attention
+block's KV leaves live in the paged block pool (one block table per slot,
+reused by every layer group) while the O(1)-per-slot SSM state stays dense
+— each cache leaf gets the substrate that actually pays off.  The engine
+routes scatters per leaf: block-table writes for pool leaves, slot-row
+writes for dense leaves.
 
 Sampling draws from per-request PRNG streams (``fold_in(seed_key, rid)``
 then per-token step) — a request's sampled tokens are independent of its
@@ -105,10 +114,15 @@ class EngineMetrics:
         return d
 
 
-# families whose caches tolerate right-padded prefill rows (attention masks
-# the pad columns away); recurrent-state families (ssm/hybrid) fold every
-# input token into their state, so they are only batched at EXACT lengths
-PADDED_PREFILL_FAMILIES = ("dense", "moe")
+# every served family tolerates right-padded prefill rows: attention masks
+# pad columns causally, and the recurrent families (ssm/hybrid) mask them
+# out of the carried state (masked SSD scan + per-row conv-state gather)
+PADDED_PREFILL_FAMILIES = ("dense", "moe", "ssm", "hybrid")
+
+# families with attention KV leaves the paged block pool can back; "ssm"
+# is excluded on purpose — its whole cache is O(1) recurrent state per
+# slot, there is nothing to page
+PAGED_FAMILIES = ("dense", "moe", "hybrid")
 
 
 class Engine:
@@ -132,20 +146,18 @@ class Engine:
         self.max_seq = max_seq
         self.sampling = sampling or SamplingConfig()
         self.prefill_bucket = prefill_bucket
-        self._pad_ok = cfg.family in PADDED_PREFILL_FAMILIES
-        if paged and not self._pad_ok:
+        if cfg.family not in PADDED_PREFILL_FAMILIES:
             raise ValueError(
-                f"family {cfg.family!r} keeps dense per-slot state; the "
-                "paged KV cache applies to attention-slab families "
-                f"{PADDED_PREFILL_FAMILIES}")
-        if prefill_chunk is not None:
-            if prefill_chunk < 1:
-                raise ValueError(f"prefill_chunk must be >= 1, "
-                                 f"got {prefill_chunk}")
-            if not self._pad_ok:
-                raise ValueError(
-                    f"family {cfg.family!r} prefills whole prompts only "
-                    "(chunked prefill needs a masked SSD scan; see ROADMAP)")
+                f"family {cfg.family!r} is not servable by this engine "
+                f"(supported: {PADDED_PREFILL_FAMILIES})")
+        if paged and cfg.family not in PAGED_FAMILIES:
+            raise ValueError(
+                f"paged=True is not supported for family {cfg.family!r}: "
+                "its cache is O(1) recurrent state per slot with no KV "
+                f"leaves to page (paged families: {PAGED_FAMILIES})")
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, "
+                             f"got {prefill_chunk}")
         self.paged = paged
         self.prefill_chunk = prefill_chunk
         if paged:
@@ -167,6 +179,7 @@ class Engine:
             self.caches = self.model.init_cache(max_batch, max_seq)
             self._stage_len = max_seq
         self._batch_axes = self._find_batch_axes()
+        self._paged_leaves = self._find_paged_leaves()
         self.positions = np.zeros(max_batch, np.int32)
         self.key = jax.random.PRNGKey(seed)
         self.active: dict[int, Request] = {}
@@ -199,46 +212,51 @@ class Engine:
 
         return jax.tree.map(one, a, b)
 
-    def _scatter_rows(self, slab_tree, rows_tree, slots: jax.Array):
-        """Write ``k`` freshly-prefilled cache rows into the slab at
-        ``slots`` — one batched scatter per leaf, inside jit."""
-        def one(slab, rows, ax):
+    def _find_paged_leaves(self):
+        """Boolean tree marking which cache leaves are paged block pools —
+        found structurally by diffing a dense probe tree against a paged
+        probe tree at sizes whose leading dims cannot coincide.  Hybrid's
+        SPLIT SUBSTRATE falls out of this: its attention KV leaves differ
+        (pool-shaped) while its dense SSM state leaves match."""
+        if not self.paged:
+            return jax.tree.map(lambda a: False, self.caches)
+        dense = self.model.init_cache(2, 4)
+        pooled = self.model.init_cache(2, 4, block_size=2, num_blocks=7)
+        return jax.tree.map(lambda a, b: a.shape != b.shape, dense, pooled)
+
+    def _scatter(self, slab_tree, rows_tree, slots, tables):
+        """Write ``k`` freshly-prefilled cache rows into the slab — one
+        batched scatter per leaf, inside jit.  Dense leaves land whole rows
+        at ``slots``; paged-pool leaves are reshaped into
+        (k, nblk, block_size, ...) blocks and scattered to the physical ids
+        in ``tables`` (k, nblk).  Unreserved table entries all point at the
+        garbage block — their writes collide there harmlessly (never read
+        back)."""
+        def one(slab, rows, ax, is_pool):
+            if is_pool:
+                bs = self.block_size
+                shape = (rows.shape[:ax + 1] + (tables.shape[1], bs)
+                         + rows.shape[ax + 2:])
+                blocks = rows.reshape(shape).astype(slab.dtype)
+                idx = (slice(None),) * ax + (tables,)
+                return slab.at[idx].set(blocks)
             idx = (slice(None),) * ax + (slots,)
             return slab.at[idx].set(rows.astype(slab.dtype))
 
-        return jax.tree.map(one, slab_tree, rows_tree, self._batch_axes)
-
-    def _scatter_blocks(self, pool_tree, rows_tree, tables: jax.Array):
-        """Paged spelling of :meth:`_scatter_rows`: reshape each fresh
-        (k, stage_len, ...) row into (k, nblk, block_size, ...) blocks and
-        scatter them to the physical ids in ``tables`` (k, nblk).
-        Unreserved table entries all point at the garbage block — their
-        writes collide there harmlessly (never read back)."""
-        bs = self.block_size
-
-        def one(pool, rows, ax):
-            shape = (rows.shape[:ax + 1] + (tables.shape[1], bs)
-                     + rows.shape[ax + 2:])
-            blocks = rows.reshape(shape).astype(pool.dtype)
-            idx = (slice(None),) * ax + (tables,)
-            return pool.at[idx].set(blocks)
-
-        return jax.tree.map(one, pool_tree, rows_tree, self._batch_axes)
+        return jax.tree.map(one, slab_tree, rows_tree, self._batch_axes,
+                            self._paged_leaves)
 
     # --- jit bodies -----------------------------------------------------
-    def _prefill_impl(self, params, tokens, slab, last_pos, target, rids,
-                      key):
+    def _prefill_impl(self, params, tokens, slab, last_pos, slots, tables,
+                      rids, key):
         """Prefill a (k, L) token bucket against fresh caches, scatter the
-        rows into the slab (dense: at slot ids; paged: at block tables),
-        sample each row's first token from its own stream."""
+        rows into the slab (dense leaves: at slot ids; pool leaves: at
+        block tables), sample each row's first token from its own stream."""
         k = tokens.shape[0]
         fresh = self.model.init_cache(k, self._stage_len)
         logits, rows = self.model.prefill(params, tokens, fresh,
                                           last_pos=last_pos)
-        if self.paged:
-            new_slab = self._scatter_blocks(slab, rows, target)
-        else:
-            new_slab = self._scatter_rows(slab, rows, target)
+        new_slab = self._scatter(slab, rows, slots, tables)
         toks = sample(logits[:, 0], key, self.sampling, rids=rids,
                       steps=jnp.zeros_like(rids))
         return toks, new_slab
@@ -259,16 +277,13 @@ class Engine:
         return staging
 
     def _chunk_finish_impl(self, params, tokens, staging, offset, last_pos,
-                           slab, target, rid, key):
+                           slab, slots, tables, rid, key):
         """Final chunk: finish the staged row, sample its first token, and
         scatter the whole staged cache into the slab/pool in one go."""
         logits, staging = self.model.prefill(params, tokens, staging,
                                              last_pos=last_pos,
                                              cache_index=offset)
-        if self.paged:
-            new_slab = self._scatter_blocks(slab, staging, target)
-        else:
-            new_slab = self._scatter_rows(slab, staging, target)
+        new_slab = self._scatter(slab, staging, slots, tables)
         tok = sample(logits[:, 0], key, self.sampling, rids=rid,
                      steps=jnp.zeros_like(rid))
         return tok, new_slab
@@ -337,8 +352,6 @@ class Engine:
         return True
 
     def _bucket_len(self, n: int) -> int:
-        if not self._pad_ok:
-            return n                       # exact-length grouping only
         bl = -(-n // self.prefill_bucket) * self.prefill_bucket
         return min(bl, self.max_seq)
 
@@ -359,16 +372,14 @@ class Engine:
                 p = reqs[i].prompt
                 toks[j, :len(p)] = p
                 last[j] = len(p) - 1
-            if self.paged:
-                target = jnp.asarray(
-                    self.block_tables[[slots[i] for i in idxs]])
-            else:
-                target = jnp.asarray([slots[i] for i in idxs])
+            slot_ids = jnp.asarray([slots[i] for i in idxs])
+            tables = (jnp.asarray(self.block_tables[[slots[i] for i in idxs]])
+                      if self.paged else None)
             rids = jnp.asarray([reqs[i].rid for i in idxs], jnp.int32)
             t0 = time.perf_counter()
             nxt, self.caches = self._prefill(
                 self.params, jnp.asarray(toks), self.caches,
-                jnp.asarray(last), target, rids, self.key)
+                jnp.asarray(last), slot_ids, tables, rids, self.key)
             nxt = np.asarray(nxt)          # sync for honest wall-clock
             self.metrics.prefill_s += time.perf_counter() - t0
             self.metrics.prefill_calls += 1
@@ -423,14 +434,14 @@ class Engine:
         pl = min(self._bucket_len(remaining), self._stage_len - cp.consumed)
         toks = np.zeros((1, pl), np.int32)
         toks[0, :remaining] = req.prompt[cp.consumed:]
-        if self.paged:
-            target = jnp.asarray(self.block_tables[cp.slot][None])
-        else:
-            target = jnp.asarray([cp.slot])
+        slot_ids = jnp.asarray([cp.slot])
+        tables = (jnp.asarray(self.block_tables[cp.slot][None])
+                  if self.paged else None)
         nxt, self.caches = self._chunk_finish(
             self.params, jnp.asarray(toks), cp.staging,
             jnp.int32(cp.consumed), jnp.asarray([remaining - 1]),
-            self.caches, target, jnp.asarray([req.rid], jnp.int32), self.key)
+            self.caches, slot_ids, tables, jnp.asarray([req.rid], jnp.int32),
+            self.key)
         nxt = np.asarray(nxt)
         self.metrics.prefill_s += time.perf_counter() - t0
         self.metrics.prefill_tokens += remaining

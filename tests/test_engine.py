@@ -77,8 +77,9 @@ def test_two_requests_different_lengths_concurrent():
 
 @pytest.mark.parametrize("arch", ["mamba2-1.3b", "zamba2-1.2b"])
 def test_mixed_length_batch_recurrent_families(arch):
-    """SSM/hybrid slabs (exact-length prefill buckets, position-free or
-    mixed caches) also match the sequential reference."""
+    """SSM/hybrid slabs (padded length buckets masked out of the recurrent
+    state, position-free or mixed caches) also match the sequential
+    reference."""
     cfg, params = _setup(arch)
     prompts = _prompts(cfg, lens=(4, 7, 4))
     eng = Engine(cfg, params, max_batch=2, max_seq=48)
@@ -88,6 +89,56 @@ def test_mixed_length_batch_recurrent_families(arch):
     ref = _sequential_reference(cfg, params, prompts, max_new=4)
     for req, expect in zip(reqs, ref):
         assert req.out == expect
+
+
+@pytest.mark.parametrize("arch", ["mamba2-1.3b", "zamba2-1.2b"])
+def test_recurrent_chunked_prefill_matches_whole_prompt(arch):
+    """The tentpole acceptance pin: for the recurrent families, bucketed
+    batched prefill AND chunked prefill (state-continuing masked SSD scan)
+    are token-identical to the exact-length whole-prompt dense oracle; the
+    hybrid additionally runs its attention leaves in the paged block pool
+    (split substrate) with dense SSM state."""
+    cfg, params = _setup(arch)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(1, cfg.vocab_size, n).tolist()
+               for n in (31, 4, 12)]          # 31 == max_seq - 1
+    modes = {
+        "whole_exact": {"prefill_bucket": 1},  # unpadded whole-prompt oracle
+        "bucketed": {},                        # padded 16-bucket batches
+        "chunked": {"prefill_chunk": 8},
+    }
+    if arch == "zamba2-1.2b":
+        modes["paged_chunked"] = {"prefill_chunk": 8, "paged": True,
+                                  "block_size": 8}
+    outs = {}
+    for mode, kw in modes.items():
+        eng = Engine(cfg, params, max_batch=2, max_seq=32, **kw)
+        reqs = [Request(rid=i, prompt=p, max_new=5)
+                for i, p in enumerate(prompts)]
+        stats = eng.serve(reqs)
+        assert stats["done"], (arch, mode)
+        if "chunk" in mode:
+            assert stats["prefill_chunks"] >= 4     # 31 tokens / 8-chunks
+        outs[mode] = [r.out for r in reqs]
+    for mode in modes:
+        assert outs[mode] == outs["whole_exact"], (arch, mode)
+
+
+def test_hybrid_paged_matches_dense_mixed_lengths():
+    """Split substrate: the hybrid with paged attention pools + dense SSM
+    state is token-identical to the all-dense hybrid on a mixed-length
+    workload with slot reuse."""
+    cfg, params = _setup("zamba2-1.2b")
+    prompts = _prompts(cfg)
+    outs = {}
+    for paged in (False, True):
+        eng = Engine(cfg, params, max_batch=3, max_seq=48, paged=paged,
+                     block_size=8)
+        reqs = [Request(rid=i, prompt=p, max_new=6)
+                for i, p in enumerate(prompts)]
+        assert eng.serve(reqs)["done"]
+        outs[paged] = [r.out for r in reqs]
+    assert outs[True] == outs[False]
 
 
 # ---------------------------------------------------------------------------
@@ -247,12 +298,14 @@ def test_submit_on_full_engine():
     assert not eng.submit(Request(rid=1, prompt=[4, 5], max_new=2))
 
 
-def test_paged_rejects_recurrent_and_oversized():
+def test_paged_rejects_ssm_and_oversized():
+    """ssm has no KV leaves to page -> clear construction-time ValueError
+    (chunked prefill, by contrast, is now supported for every served
+    family); oversized block demands are rejected at submit."""
     cfg, params = _setup("mamba2-1.3b")
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="paged"):
         Engine(cfg, params, max_batch=1, max_seq=32, paged=True)
-    with pytest.raises(ValueError):
-        Engine(cfg, params, max_batch=1, max_seq=32, prefill_chunk=8)
+    Engine(cfg, params, max_batch=1, max_seq=32, prefill_chunk=8)  # ok now
     cfg2, params2 = _setup()
     eng = Engine(cfg2, params2, max_batch=1, max_seq=64, paged=True,
                  block_size=8, num_blocks=4)

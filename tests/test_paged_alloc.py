@@ -1,0 +1,82 @@
+"""Property tests for the paged-cache block allocator (host-side).
+
+Invariants the engine's reservation logic leans on:
+  * no double-allocation: outstanding blocks are unique, never the garbage
+    block, and never handed out twice while held;
+  * frees return to the pool: used + free == num_blocks - 1 always, and a
+    full release cycle restores the initial free count;
+  * backpressure ordering: an alloc that fails (pool short) changes
+    nothing, and the exact same request succeeds once enough blocks are
+    released.
+"""
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install hypothesis)")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.serve.paged import GARBAGE_BLOCK, BlockAllocator, blocks_needed
+
+
+@settings(max_examples=60, deadline=None)
+@given(num_blocks=st.integers(2, 24),
+       ops=st.lists(st.tuples(st.sampled_from(["alloc", "release"]),
+                              st.integers(0, 8)), max_size=40))
+def test_allocator_invariants(num_blocks, ops):
+    a = BlockAllocator(num_blocks, block_size=4)
+    capacity = num_blocks - 1                 # block 0 is reserved garbage
+    assert a.free_blocks == capacity
+    held: list[list[int]] = []
+    for op, n in ops:
+        if op == "alloc":
+            before = a.free_blocks
+            got = a.alloc(n)
+            if n > before:
+                assert got is None            # backpressure...
+                assert a.free_blocks == before  # ...with no side effects
+            else:
+                assert got is not None and len(got) == n
+                held.append(got)
+        elif held:
+            a.release(held.pop(n % len(held)))
+        outstanding = [b for blocks in held for b in blocks]
+        # no double-allocation, never the garbage block, all in range
+        assert len(outstanding) == len(set(outstanding))
+        assert all(GARBAGE_BLOCK < b < num_blocks for b in outstanding)
+        # conservation: every block is either free or held
+        assert a.free_blocks + len(outstanding) == capacity
+        assert a.used_blocks == len(outstanding)
+    for blocks in held:
+        a.release(blocks)
+    assert a.free_blocks == capacity and a.used_blocks == 0
+
+
+@settings(max_examples=60, deadline=None)
+@given(num_blocks=st.integers(3, 24), want=st.integers(1, 24))
+def test_failed_alloc_succeeds_after_release(num_blocks, want):
+    """FIFO head-of-line semantics: a request that backpressures succeeds
+    unchanged once blocks free up."""
+    a = BlockAllocator(num_blocks, block_size=4)
+    hog = a.alloc(a.free_blocks)              # drain the pool
+    assert a.alloc(min(want, num_blocks - 1)) is None or want == 0
+    a.release(hog)
+    if want <= num_blocks - 1:
+        got = a.alloc(want)
+        assert got is not None and len(got) == want
+    else:
+        assert a.alloc(want) is None          # can never fit: stays None
+
+
+@settings(max_examples=60, deadline=None)
+@given(prompt=st.integers(1, 512), max_new=st.integers(1, 256),
+       max_seq=st.integers(2, 512), bs=st.integers(1, 64))
+def test_blocks_needed_bounds(prompt, max_new, max_seq, bs):
+    """Reservation covers the whole lifetime but never exceeds a full
+    max_seq row's worth of blocks."""
+    n = blocks_needed(prompt, max_new, max_seq, bs)
+    lifetime = min(prompt + max_new, max_seq)
+    assert n * bs >= lifetime                 # enough for prompt + decode
+    assert (n - 1) * bs < lifetime            # tight: no over-reservation
+    assert n <= -(-max_seq // bs)             # capped at the row budget

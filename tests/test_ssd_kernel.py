@@ -34,6 +34,51 @@ def test_ssd_kernel_matches_chunked_jnp(B, S, H, P, G, N, chunk):
                                rtol=1e-4, atol=1e-4)
 
 
+def test_ssd_resume_matches_whole_sequence():
+    """State continuation: scanning a sequence in two halves, feeding the
+    first half's final state as the second half's initial state, equals one
+    whole-sequence scan — for the jnp path AND the pallas kernel (the
+    contract chunked prefill rests on)."""
+    B, S, H, P, G, N, chunk = 2, 256, 4, 16, 2, 8, 64
+    x, dt, a, b, c = _inputs(B, S, H, P, G, N, seed=7)
+    y_w, fs_w = _ssd_chunked(x, dt, a, b, c, chunk)
+    h = S // 2
+    y1, fs1 = _ssd_chunked(x[:, :h], dt[:, :h], a, b[:, :h], c[:, :h], chunk)
+    y2, fs2 = _ssd_chunked(x[:, h:], dt[:, h:], a, b[:, h:], c[:, h:], chunk,
+                           initial_state=fs1)
+    np.testing.assert_allclose(np.concatenate([y1, y2], 1), np.asarray(y_w),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(fs2), np.asarray(fs_w),
+                               rtol=2e-4, atol=2e-4)
+    yk, fsk = ssd_chunked_kernel(x[:, h:], dt[:, h:], a, b[:, h:], c[:, h:],
+                                 chunk=chunk, interpret=True,
+                                 initial_state=fs1)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(fsk), np.asarray(fs2),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("L", [77, 128, 1])
+def test_ssd_mask_matches_exact_prefix(L):
+    """A right-padded masked scan carries exactly the valid prefix's state
+    (pad positions are inert), incl. valid lengths off the chunk grid."""
+    B, S, H, P, G, N, chunk = 2, 128, 4, 16, 2, 8, 32
+    x, dt, a, b, c = _inputs(B, S, H, P, G, N, seed=11)
+    mask = jnp.broadcast_to(jnp.arange(S)[None, :] < L, (B, S))
+    y_m, fs_m = _ssd_chunked(x, dt, a, b, c, chunk, mask=mask)
+    y_e, fs_e = _ssd_chunked(x[:, :L], dt[:, :L], a, b[:, :L], c[:, :L],
+                             chunk)
+    np.testing.assert_allclose(np.asarray(y_m)[:, :L], np.asarray(y_e),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(fs_m), np.asarray(fs_e),
+                               rtol=2e-4, atol=2e-4)
+    yk, fsk = ssd_chunked_kernel(x, dt, a, b, c, chunk=chunk,
+                                 interpret=True, mask=mask)
+    np.testing.assert_allclose(np.asarray(fsk), np.asarray(fs_m),
+                               rtol=1e-4, atol=1e-4)
+
+
 def test_ssd_kernel_matches_sequential_recurrence():
     """The chunked algorithm == the token-by-token state recurrence."""
     B, S, H, P, G, N = 2, 256, 4, 16, 2, 8
