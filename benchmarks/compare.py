@@ -6,8 +6,11 @@ that drops more than ``--threshold`` (default 25%) below the baseline is a
 regression and exits 1.  Leaves new in the current run are reported but
 never fail (the baseline catches up at the next refresh); leaves MISSING
 from the current run fail — a silently dropped scenario is how a gate goes
-dark.  A markdown delta table is printed (append to ``$GITHUB_STEP_SUMMARY``
-via ``--summary`` in CI).
+dark.  The ``prefix`` section additionally carries an ABSOLUTE gate: the
+shared-system-prompt scenario's warm prefill tok/s must beat its own cold
+prefill tok/s (a prefix cache that doesn't out-run recomputation is a
+regression no baseline drift can excuse).  A markdown delta table is
+printed (append to ``$GITHUB_STEP_SUMMARY`` via ``--summary`` in CI).
 
 Local repro / baseline refresh:
 
@@ -60,6 +63,24 @@ def compare(baseline: dict, current: dict, threshold: float):
     return rows, regressions, missing
 
 
+def check_prefix_win(current: dict) -> list[str]:
+    """Absolute warm-path gate on the ``prefix`` section: for every arch,
+    warm prefill tok/s must be STRICTLY above cold.  Returns failure
+    messages (empty = pass).  A current run without the section is caught
+    by the MISSING-leaf rule once the baseline carries it."""
+    fails = []
+    for arch, row in current.get("prefix", {}).items():
+        cold = row.get("cold_prefill_tok_s")
+        warm = row.get("warm_prefill_tok_s")
+        if cold is None or warm is None:
+            fails.append(f"prefix.{arch}: cold/warm prefill tok/s missing")
+        elif warm <= cold:
+            fails.append(
+                f"prefix.{arch}: warm prefill {warm:,.1f} tok/s does not "
+                f"beat cold {cold:,.1f} tok/s")
+    return fails
+
+
 def markdown_table(rows, threshold: float) -> str:
     def fmt(v):
         return "—" if v is None else f"{v:,.1f}"
@@ -93,18 +114,28 @@ def main() -> None:
         current = json.load(f)
 
     rows, regressions, missing = compare(baseline, current, args.threshold)
+    prefix_fails = check_prefix_win(current)
     table = markdown_table(rows, args.threshold)
+    if prefix_fails:
+        table += "\n" + "\n".join(f"❌ {m}" for m in prefix_fails) + "\n"
+    elif current.get("prefix"):
+        wins = ", ".join(f"{a} {r['speedup']:.2f}x"
+                         for a, r in current["prefix"].items()
+                         if "speedup" in r)
+        table += f"\n✅ prefix warm-path win: {wins}\n"
     print(table)
     if args.summary:
         with open(args.summary, "a") as f:
             f.write(table)
 
-    if regressions or missing:
+    if regressions or missing or prefix_fails:
         for p in regressions:
             print(f"FAIL: {p} regressed more than {args.threshold:.0%}",
                   file=sys.stderr)
         for p in missing:
             print(f"FAIL: {p} missing from the current run", file=sys.stderr)
+        for m in prefix_fails:
+            print(f"FAIL: {m}", file=sys.stderr)
         sys.exit(1)
     print(f"gate OK: {sum(1 for r in rows if r[4] == 'ok')} metrics within "
           f"{args.threshold:.0%} of baseline")

@@ -3,8 +3,10 @@ engine and roofline benches.  Prints ``name,us_per_call,derived`` CSV.
 
 ``--smoke`` runs a minutes-not-hours subset (CI uploads its CSV as an
 artifact): one kernel bench + the serving-engine smoke, and writes
-``BENCH_engine.json`` (decode/prefill tok/s + occupancy per slab width) so
-the perf trajectory accumulates across commits.
+``BENCH_engine.json`` (decode/prefill tok/s + occupancy per slab width,
+recurrent chunked-prefill scenarios, and the prefix-cache
+shared-system-prompt warm-vs-cold section) so the perf trajectory
+accumulates across commits.
 """
 from __future__ import annotations
 

@@ -32,6 +32,13 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="admit prompts longer than this in N-token chunks "
                          "interleaved with decode ticks")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix-tree prompt-prefix sharing: warm "
+                         "admissions reuse cached KV blocks (attention, "
+                         "needs --paged) or recurrent state snapshots "
+                         "(ssm) and prefill only the uncached tail")
+    ap.add_argument("--prefix-cache-nodes", type=int, default=256,
+                    help="LRU budget for cached prefix boundaries")
     ap.add_argument("--sampling", default="greedy",
                     choices=["greedy", "temperature", "top_k"])
     ap.add_argument("--temperature", type=float, default=1.0)
@@ -64,7 +71,9 @@ def main():
                     seed=args.seed, prefill_bucket=args.prefill_bucket,
                     paged=args.paged, block_size=args.block_size,
                     num_blocks=args.num_blocks,
-                    prefill_chunk=args.prefill_chunk)
+                    prefill_chunk=args.prefill_chunk,
+                    prefix_cache=args.prefix_cache,
+                    prefix_cache_nodes=args.prefix_cache_nodes)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(1, cfg.vocab_size, 6).tolist(),
@@ -80,6 +89,10 @@ def main():
     print(f"  decode:  {stats['decode_tokens']} tok in "
           f"{stats['decode_s']:.2f}s ({stats['decode_tok_s']:.0f} tok/s, "
           f"occupancy {stats['occupancy']:.0%})")
+    if args.prefix_cache:
+        print(f"  prefix:  {stats['prefix_hits']} hits, "
+              f"{stats['prefix_tokens_reused']} tok reused, "
+              f"{stats['cache_evictions']} evictions")
 
 
 if __name__ == "__main__":

@@ -19,7 +19,8 @@ from repro.models.attention import KVCache, init_gqa
 from repro.models.common import (dense_init, embed_init, gather_last,
                                  rms_norm, remat_policy_of, token_positions)
 from repro.models.mlp import init_mlp, mlp
-from repro.models.ssm import SSMCache, init_mamba2, mamba2_block, ssm_cache_shape
+from repro.models.ssm import (SSMCache, init_mamba2, mamba2_block,
+                              snapshot_row, ssm_cache_shape)
 from repro.models.transformer import chunked_xent
 
 
@@ -163,6 +164,20 @@ class HybridLM:
             jnp.zeros((cfg.num_layers,) + conv_s, dt),
             jnp.zeros((cfg.num_layers,) + state_s, jnp.float32))
         return (attn_caches, ssm_caches)
+
+    def state_snapshot(self, caches, row: int = 0):
+        """Prefix-cache export: only the SSM half of the split substrate —
+        the attention KV for the same boundary lives in (refcount-shared)
+        paged-pool blocks, not in the snapshot."""
+        _, ssm_caches = caches
+        return snapshot_row(ssm_caches, row)
+
+    def seed_from_snapshot(self, staging, snap):
+        """Warm admission: keep the staging attention leaves (the engine
+        has already gathered the cached prefix KV into them) and swap in
+        the snapshot's recurrent state."""
+        attn_staging, _ = staging
+        return (attn_staging, snap)
 
     def prefill(self, params, tokens, caches, *, last_pos=None,
                 cache_index=0):

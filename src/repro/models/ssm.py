@@ -22,6 +22,15 @@ class SSMCache(NamedTuple):
     state: jax.Array  # (B, H, P, N)
 
 
+def snapshot_row(cache: SSMCache, row: int = 0) -> SSMCache:
+    """One batch row of a layer-stacked (L, B, ...) recurrent cache,
+    keepdim — the fixed-size dense state snapshot the prefix cache stores
+    at a prompt boundary.  The SSD scan is state-continuing (it accepts an
+    initial (B,H,P,N) state), so prefill seeded from this snapshot resumes
+    exactly where the cached prefix left off."""
+    return SSMCache(cache.conv[:, row:row + 1], cache.state[:, row:row + 1])
+
+
 def _dims(cfg):
     sc = cfg.ssm
     d_inner = sc.expand * cfg.d_model

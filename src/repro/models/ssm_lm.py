@@ -7,7 +7,8 @@ import jax.numpy as jnp
 from repro.core.layers import quant_matmul
 from repro.models.common import (dense_init, embed_init, gather_last,
                                  rms_norm, remat_policy_of)
-from repro.models.ssm import SSMCache, init_mamba2, mamba2_block, ssm_cache_shape
+from repro.models.ssm import (SSMCache, init_mamba2, mamba2_block,
+                              snapshot_row, ssm_cache_shape)
 from repro.models.transformer import chunked_xent
 
 
@@ -81,6 +82,18 @@ class SSMLM:
         return SSMCache(
             jnp.zeros((cfg.num_layers,) + conv_s, dt),
             jnp.zeros((cfg.num_layers,) + state_s, jnp.float32))
+
+    def state_snapshot(self, caches, row: int = 0):
+        """Prefix-cache export: the whole cache IS the recurrent state —
+        one (conv, ssd) row pair at ``row``, O(1) in prefix length."""
+        return snapshot_row(caches, row)
+
+    def seed_from_snapshot(self, staging, snap):
+        """Warm admission: a 1-row staging cache seeded from a snapshot is
+        the snapshot itself (position-free recurrence, nothing else to
+        restore)."""
+        del staging
+        return snap
 
     def prefill(self, params, tokens, caches, *, last_pos=None,
                 cache_index=0):

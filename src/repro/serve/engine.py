@@ -39,6 +39,25 @@ reused by every layer group) while the O(1)-per-slot SSM state stays dense
 routes scatters per leaf: block-table writes for pool leaves, slot-row
 writes for dense leaves.
 
+**Prefix cache** (``prefix_cache=True``): a radix tree over prompt tokens
+(``repro.serve.prefix_cache``) remembers what prefill already computed.
+Admission matches the longest cached prefix and re-prefills only the
+uncached tail — LUNA's capacity-for-computation bet applied to serving:
+
+* attention families (``paged=True`` required): cached prefixes own
+  refcounted pool blocks, shared COPY-ON-WRITE into the new request's
+  block table (the tail lands in private blocks; the staged scatter's
+  shared range is redirected to the garbage block, so a shared block is
+  never written in place);
+* recurrent families: cached prefixes store the fixed-size dense
+  (conv_state, ssd_state) snapshot at the boundary, and the
+  state-continuing SSD scan resumes from it; the hybrid combines both
+  (paged attention blocks + state snapshot at block-aligned boundaries).
+
+Warm admissions ride the same staged machinery as chunked prefill — whose
+token-identity to whole-prompt prefill is already pinned — so warm output
+is token-identical to cold for every family and both scheduler paths.
+
 Sampling draws from per-request PRNG streams (``fold_in(seed_key, rid)``
 then per-token step) — a request's sampled tokens are independent of its
 slot index, co-tenants, and scheduling, for every sampling mode.
@@ -56,7 +75,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.registry import get_model
-from repro.serve.paged import GARBAGE_BLOCK, BlockAllocator, blocks_needed
+from repro.serve.paged import (GARBAGE_BLOCK, BlockAllocator, blocks_needed,
+                               ceil_div)
+from repro.serve.prefix_cache import PrefixCache
 from repro.serve.sampling import SamplingConfig, sample
 
 
@@ -69,13 +90,20 @@ class Request:
     done: bool = False
 
 
-@dataclass
+@dataclass(eq=False)
 class _ChunkedPrefill:
-    """A long admission in flight: its reserved slot + staged cache rows."""
+    """A staged admission in flight: its reserved slot + staged cache rows
+    (long chunked prompts, warm prefix-cache hits, and cold recurrent
+    admissions that capture a mid-prompt state snapshot all ride this).
+    ``eq=False``: identity semantics — field-wise ``==`` on staged jax
+    pytrees is both meaningless and a crash."""
     req: Request
     slot: int
     staging: object        # dense (1, stage_len) cache tree
-    consumed: int = 0      # prompt tokens already prefilled
+    consumed: int = 0      # prompt tokens already prefilled (or reused)
+    capture_at: int | None = None   # grid boundary to snapshot state at
+    captured: object | None = None  # the snapshot, once captured
+    scatter_table: object | None = None  # COW redirect for the final scatter
 
 
 @dataclass
@@ -89,6 +117,9 @@ class EngineMetrics:
     prefill_chunks: int = 0      # chunked-admission pieces among those
     ticks: int = 0
     occupancy_sum: int = 0       # sum over ticks of active slots
+    prefix_hits: int = 0         # admissions seeded from the prefix cache
+    prefix_tokens_reused: int = 0   # prompt tokens NOT re-prefilled
+    cache_evictions: int = 0     # prefix-cache nodes evicted (LRU)
 
     def since(self, start: "EngineMetrics") -> "EngineMetrics":
         """Per-call delta: these counters minus a ``start`` snapshot (the
@@ -110,6 +141,9 @@ class EngineMetrics:
             "decode_tok_s": self.decode_tokens / max(self.decode_s, 1e-9),
             "occupancy": (self.occupancy_sum / (self.ticks * max_batch)
                           if self.ticks else 0.0),
+            "prefix_hits": self.prefix_hits,
+            "prefix_tokens_reused": self.prefix_tokens_reused,
+            "cache_evictions": self.cache_evictions,
         }
         return d
 
@@ -131,7 +165,9 @@ class Engine:
                  seed: int = 0, prefill_bucket: int = 16,
                  paged: bool = False, block_size: int = 16,
                  num_blocks: int | None = None,
-                 prefill_chunk: int | None = None):
+                 prefill_chunk: int | None = None,
+                 prefix_cache: bool = False,
+                 prefix_cache_nodes: int = 256):
         if cfg.family in ("encdec", "vlm"):
             raise ValueError(
                 f"family {cfg.family!r} needs modality inputs the text-only "
@@ -158,11 +194,18 @@ class Engine:
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1, "
                              f"got {prefill_chunk}")
+        if prefix_cache and cfg.family in ("dense", "moe", "hybrid") \
+                and not paged:
+            raise ValueError(
+                f"prefix_cache for family {cfg.family!r} shares its "
+                "attention KV as copy-on-write paged blocks — construct "
+                "with paged=True (the ssm family caches dense state "
+                "snapshots and needs no paging)")
         self.paged = paged
         self.prefill_chunk = prefill_chunk
         if paged:
             self.block_size = block_size
-            self.blocks_per_row = -(-max_seq // block_size)
+            self.blocks_per_row = ceil_div(max_seq, block_size)
             self.num_blocks = (num_blocks if num_blocks is not None
                                else max_batch * self.blocks_per_row + 1)
             self.allocator = BlockAllocator(self.num_blocks, block_size)
@@ -180,6 +223,17 @@ class Engine:
             self._stage_len = max_seq
         self._batch_axes = self._find_batch_axes()
         self._paged_leaves = self._find_paged_leaves()
+        self._needs_state = cfg.family in ("ssm", "hybrid")
+        self.prefix_cache = None
+        if prefix_cache:
+            self.prefix_cache = PrefixCache(
+                block_size=block_size if paged else None,
+                allocator=self.allocator if paged else None,
+                max_nodes=prefix_cache_nodes)
+            # recurrent snapshots are captured on this boundary grid;
+            # paged backends must land on whole blocks
+            self._capture_grid = block_size if paged else prefill_bucket
+        self._evictions_seen = 0
         self.positions = np.zeros(max_batch, np.int32)
         self.key = jax.random.PRNGKey(seed)
         self.active: dict[int, Request] = {}
@@ -190,6 +244,7 @@ class Engine:
         self._decode = jax.jit(self._decode_impl)
         self._chunk_step = jax.jit(self._chunk_step_impl)
         self._chunk_finish = jax.jit(self._chunk_finish_impl)
+        self._seed_gather = jax.jit(self._seed_gather_impl)
 
     # --- cache-slab layout ----------------------------------------------
     def _find_batch_axes(self):
@@ -279,14 +334,16 @@ class Engine:
     def _chunk_finish_impl(self, params, tokens, staging, offset, last_pos,
                            slab, slots, tables, rid, key):
         """Final chunk: finish the staged row, sample its first token, and
-        scatter the whole staged cache into the slab/pool in one go."""
+        scatter the whole staged cache into the slab/pool in one go.  The
+        finished staging tree is also returned — the prefix cache snapshots
+        its recurrent leaves (state at the full prompt boundary)."""
         logits, staging = self.model.prefill(params, tokens, staging,
                                              last_pos=last_pos,
                                              cache_index=offset)
         new_slab = self._scatter(slab, staging, slots, tables)
         tok = sample(logits[:, 0], key, self.sampling, rids=rid,
                      steps=jnp.zeros_like(rid))
-        return tok, new_slab
+        return tok, new_slab, staging
 
     # --- admission ------------------------------------------------------
     def _validate(self, req: Request):
@@ -298,28 +355,54 @@ class Engine:
             raise ValueError(
                 f"request {req.rid}: prompt length {len(req.prompt)} not in "
                 f"[1, max_seq-1={self.max_seq - 1}]")
-        if self.paged and self._blocks_needed(req) > self.num_blocks - 1:
-            raise ValueError(
-                f"request {req.rid} needs {self._blocks_needed(req)} blocks "
-                f"but the pool holds {self.num_blocks - 1}")
+        if self.paged:
+            need = blocks_needed(len(req.prompt), req.max_new, self.max_seq,
+                                 self.block_size)
+            if need > self.num_blocks - 1:
+                raise ValueError(
+                    f"request {req.rid} needs {need} blocks but the pool "
+                    f"holds {self.num_blocks - 1}")
 
-    def _blocks_needed(self, req: Request) -> int:
-        return blocks_needed(len(req.prompt), req.max_new, self.max_seq,
-                             self.block_size)
-
-    def _reserve(self, req: Request, slot: int) -> bool:
+    def _reserve(self, req: Request, slot: int,
+                 hit=None) -> bool:
         """Paged: claim the request's lifetime block budget up front, so a
-        decode tick can never run out of blocks mid-request.  False =
+        decode tick can never run out of blocks mid-request.  A prefix-hit
+        admission refs the matched node's blocks (copy-on-write share) and
+        allocates only the tail privately; when the pool runs short, LRU
+        unreferenced cache nodes are evicted before backpressuring.  False =
         backpressure (pool short); dense mode always succeeds."""
         if not self.paged:
             return True
-        blocks = self.allocator.alloc(self._blocks_needed(req))
-        if blocks is None:
+        shared = list(hit.blocks) if hit is not None else []
+        need = blocks_needed(len(req.prompt), req.max_new, self.max_seq,
+                             self.block_size) - len(shared)
+        assert need >= 0, (need, len(shared))
+        # take the request's ref BEFORE any eviction: the extra owner makes
+        # the matched node's blocks non-evictable, so evict_for can neither
+        # free them nor recycle them as this admission's private tail
+        if shared:
+            self.allocator.ref(shared)
+        if need > self.allocator.free_blocks and self.prefix_cache:
+            self.prefix_cache.evict_for(need)
+            self._note_evictions()
+        fresh = self.allocator.alloc(need)
+        if fresh is None:
+            if shared:
+                self.allocator.release(shared)
             return False
+        blocks = shared + fresh
         self._slot_blocks[slot] = blocks
         self.block_tables[slot, :] = GARBAGE_BLOCK
         self.block_tables[slot, :len(blocks)] = blocks
         return True
+
+    def _note_evictions(self):
+        """Fold the prefix cache's lifetime eviction count into the
+        monotonic engine metrics."""
+        if self.prefix_cache is not None:
+            d = self.prefix_cache.evictions - self._evictions_seen
+            self._evictions_seen = self.prefix_cache.evictions
+            self.metrics.cache_evictions += d
 
     def _release_slot_resources(self, slot: int):
         if self.paged and self._slot_blocks[slot]:
@@ -336,24 +419,143 @@ class Engine:
         return (self.prefill_chunk is not None
                 and prompt_len > self.prefill_chunk)
 
+    # --- prefix cache ---------------------------------------------------
+    def _match_prefix(self, req: Request):
+        """Longest cached prefix usable for this admission (None = cold).
+        At least one tail token must still run through prefill to produce
+        the last-position logits, hence the ``len - 1`` cap."""
+        if self.prefix_cache is None:
+            return None
+        return self.prefix_cache.match(req.prompt,
+                                       max_len=len(req.prompt) - 1,
+                                       need_state=self._needs_state)
+
+    def _capture_boundary(self, prompt_len: int) -> int:
+        """Grid boundary to snapshot recurrent state at (0 = none)."""
+        return (prompt_len // self._capture_grid) * self._capture_grid
+
+    def _route_staged(self, req: Request, hit, lone: bool = True) -> bool:
+        """True when the admission must ride the staged path: chunked long
+        prompts, every warm hit (the staging row is seeded from the cache),
+        and LONE cold recurrent admissions that want a mid-prompt state
+        snapshot (the prefill is split at the grid boundary to capture it).
+        ``lone=False`` — other cold requests are being admitted this tick —
+        keeps cold recurrent prompts on the batched bucket path: concurrent
+        cold prefill throughput beats an extra capture boundary (the cache
+        still populates from their full-prompt inserts and from warm /
+        chunked admissions)."""
+        if hit is not None or self._chunkable(len(req.prompt)):
+            return True
+        if not lone or self.prefix_cache is None or not self._needs_state:
+            return False
+        cap = self._capture_boundary(len(req.prompt))
+        return 0 < cap < len(req.prompt)
+
+    def _seed_gather_impl(self, caches, tbl):
+        """Jit body: fresh 1-row staging tree with every pool leaf's shared
+        blocks gathered into its dense staging leaf (logical order, exactly
+        the values the cold prefill wrote).  Gathers run along each leaf's
+        structural block axis (scan-stacked leaves carry a leading layer
+        axis), mirroring ``_scatter``."""
+        staging = self.model.init_cache(1, self._stage_len)
+
+        def one(stg, pool, ax, is_pool):
+            if not is_pool:
+                return stg
+            g = jnp.take(pool, tbl, axis=ax)      # (..., 1, nblk, bs, ...)
+            return g.reshape(stg.shape)
+
+        return jax.tree.map(one, staging, self.caches, self._batch_axes,
+                            self._paged_leaves)
+
+    def _seed_staging(self, hit):
+        """Build the warm admission's staging row: gather the shared
+        blocks' KV into the dense staging leaves (one jit call, compiled
+        once) and swap in the recurrent state snapshot.  The tail prefill
+        then continues at ``hit.length`` as if the first chunks had just
+        run."""
+        if self.paged and hit.blocks:
+            table = np.full((1, self.blocks_per_row), GARBAGE_BLOCK,
+                            np.int32)
+            table[0, :len(hit.blocks)] = hit.blocks
+            staging = self._seed_gather(self.caches, jnp.asarray(table))
+        else:
+            staging = self.model.init_cache(1, self._stage_len)
+        if hit.state is not None:
+            staging = self.model.seed_from_snapshot(staging, hit.state)
+        return staging
+
+    def _insert_boundary(self, prompt: list[int], slot: int, state):
+        """One cached boundary — THE per-family storage policy: ssm needs
+        only the state snapshot; attention families contribute the whole
+        pool blocks of the prompt prefix (any grid multiple); the hybrid
+        needs both halves at ONE boundary, so it stores only block-aligned
+        prompts.  Blocks always come from the slot's reserved table."""
+        fam = self.cfg.family
+        if fam == "ssm":
+            if state is not None:
+                self.prefix_cache.insert(prompt, state=state)
+            return
+        nb = len(prompt) // self.block_size
+        if nb == 0:
+            return
+        blocks = self._slot_blocks[slot][:nb]
+        if fam == "hybrid":
+            if state is None or len(prompt) % self.block_size:
+                return
+            self.prefix_cache.insert(prompt, blocks=blocks, state=state)
+        else:
+            self.prefix_cache.insert(prompt[:nb * self.block_size],
+                                     blocks=blocks)
+
+    def _prefix_insert_from_slot(self, req: Request, slot: int):
+        """Cold batched admission: cache the freshly-prefilled prefix —
+        state (if the family carries one) sliced from the slot's cache row
+        at the full prompt boundary."""
+        if self.prefix_cache is None:
+            return
+        state = (self.model.state_snapshot(self.caches, slot)
+                 if self._needs_state else None)
+        self._insert_boundary(req.prompt, slot, state)
+        self._note_evictions()
+
+    def _finish_prefix_insert(self, cp: _ChunkedPrefill, staged_out):
+        """Staged admission done: insert the mid-prompt capture (if one was
+        taken) and the full-prompt boundary into the radix tree."""
+        if self.prefix_cache is None:
+            return
+        req, slot = cp.req, cp.slot
+        if cp.captured is not None:
+            self._insert_boundary(req.prompt[:cp.capture_at], slot,
+                                  cp.captured)
+        state = (self.model.state_snapshot(staged_out, 0)
+                 if self._needs_state else None)
+        self._insert_boundary(req.prompt, slot, state)
+        self._note_evictions()
+
     # --- public API -----------------------------------------------------
     def submit(self, req: Request) -> bool:
         """Admit one request; False if no slot is free (or, paged mode, the
         block pool is short).  Long prompts under ``prefill_chunk`` start a
-        chunked admission — ``step()`` advances it one chunk per tick."""
+        chunked admission — ``step()`` advances it one chunk per tick.
+        With the prefix cache on, admission first matches the longest
+        cached prompt prefix and prefills only the tail."""
         self._validate(req)
         free = [s for s, r in enumerate(self.slots) if r is None]
-        if not free or not self._reserve(req, free[0]):
+        if not free:
             return False
-        if self._chunkable(len(req.prompt)):
-            self._start_chunked(req, free[0])
+        hit = self._match_prefix(req)
+        if not self._reserve(req, free[0], hit):
+            return False
+        if self._route_staged(req, hit):
+            self._start_staged(req, free[0], hit)
         else:
             self._admit([req], free[:1])
         return True
 
     def _bucket_len(self, n: int) -> int:
-        bl = -(-n // self.prefill_bucket) * self.prefill_bucket
-        return min(bl, self.max_seq)
+        return min(ceil_div(n, self.prefill_bucket) * self.prefill_bucket,
+                   self.max_seq)
 
     def _admit(self, reqs: list[Request], slots: list[int]):
         """Prefill ``reqs`` into ``slots`` — one jit call per length bucket,
@@ -387,6 +589,7 @@ class Engine:
                 req, slot = reqs[i], slots[i]
                 req.out.append(int(nxt[j]))
                 self.metrics.prefill_tokens += len(req.prompt)
+                self._prefix_insert_from_slot(req, slot)
                 if len(req.out) >= req.max_new:
                     # cap already met by the prefill-sampled token
                     # (max_new=1): done at admission, never decode-ticked
@@ -397,24 +600,58 @@ class Engine:
                 self.slots[slot] = req
                 self.active[req.rid] = req
 
-    # --- chunked prefill ------------------------------------------------
-    def _start_chunked(self, req: Request, slot: int):
-        """Reserve ``slot`` for a long admission; the prompt is fed to a
-        staged 1-row cache one chunk per tick and only joins ``active``
-        (decode) once the last chunk lands."""
+    # --- staged (chunked / warm-prefix) prefill -------------------------
+    def _start_staged(self, req: Request, slot: int, hit=None):
+        """Reserve ``slot`` for a staged admission.  The prompt is fed to a
+        staged 1-row cache — one chunk per tick under ``prefill_chunk``,
+        synchronously otherwise — and the request only joins ``active``
+        (decode) once the last piece lands.  A prefix ``hit`` seeds the
+        staging row (shared blocks gathered + state snapshot) and skips the
+        first ``hit.length`` prompt tokens; the final scatter of a warm
+        paged admission redirects the shared-block range to the garbage
+        block so a shared block is never written in place (copy-on-write)."""
         self.slots[slot] = req
         self.positions[slot] = 0
-        self._chunked.append(_ChunkedPrefill(
-            req, slot, self.model.init_cache(1, self._stage_len)))
+        consumed, scatter_table = 0, None
+        if hit is not None:
+            staging = self._seed_staging(hit)
+            consumed = hit.length
+            if self.paged:
+                scatter_table = self.block_tables[slot].copy()
+                scatter_table[:len(hit.blocks)] = GARBAGE_BLOCK
+            self.metrics.prefix_hits += 1
+            self.metrics.prefix_tokens_reused += consumed
+        else:
+            staging = self.model.init_cache(1, self._stage_len)
+        cap = None
+        if self.prefix_cache is not None and self._needs_state:
+            c = self._capture_boundary(len(req.prompt))
+            if consumed < c < len(req.prompt):
+                cap = c
+        cp = _ChunkedPrefill(req, slot, staging, consumed, capture_at=cap,
+                             scatter_table=scatter_table)
+        self._chunked.append(cp)
+        if self.prefill_chunk is None:
+            # no chunked scheduling: drive the staged admission to
+            # completion now, preserving admit-at-submit semantics (cp is
+            # the only queue entry — earlier ones all drained the same way)
+            while self._chunked and self._chunked[0] is cp:
+                self._advance_chunked()
 
     def _advance_chunked(self):
-        """Run AT MOST one prefill chunk (FIFO head) — this bounds the
-        prefill work any decode tick waits on to one chunk."""
+        """Run AT MOST one prefill piece (FIFO head) — this bounds the
+        prefill work any decode tick waits on to one chunk.  Pieces are cut
+        at the state-capture grid boundary so the prefix cache can snapshot
+        the staged recurrent state mid-prompt."""
         if not self._chunked:
             return
         cp = self._chunked[0]
-        req, c = cp.req, self.prefill_chunk
+        req = cp.req
         remaining = len(req.prompt) - cp.consumed
+        c = self.prefill_chunk if self.prefill_chunk is not None \
+            else remaining
+        if cp.capture_at is not None and cp.consumed < cp.capture_at:
+            c = min(c, cp.capture_at - cp.consumed)
         t0 = time.perf_counter()
         if remaining > c:
             toks = np.asarray(req.prompt[cp.consumed:cp.consumed + c],
@@ -426,7 +663,10 @@ class Engine:
             self.metrics.prefill_s += time.perf_counter() - t0
             self.metrics.prefill_tokens += c
             self.metrics.prefill_calls += 1
-            self.metrics.prefill_chunks += 1
+            if self.prefill_chunk is not None:
+                self.metrics.prefill_chunks += 1
+            if cp.capture_at == cp.consumed:
+                cp.captured = self.model.state_snapshot(cp.staging, 0)
             return
         # final piece: pad to the bucket grid (static shapes), sample the
         # request's first token, scatter the staged row into the slab/pool
@@ -435,9 +675,13 @@ class Engine:
         toks = np.zeros((1, pl), np.int32)
         toks[0, :remaining] = req.prompt[cp.consumed:]
         slot_ids = jnp.asarray([cp.slot])
-        tables = (jnp.asarray(self.block_tables[cp.slot][None])
-                  if self.paged else None)
-        nxt, self.caches = self._chunk_finish(
+        if self.paged:
+            table = (cp.scatter_table if cp.scatter_table is not None
+                     else self.block_tables[cp.slot])
+            tables = jnp.asarray(table[None])
+        else:
+            tables = None
+        nxt, self.caches, staged_out = self._chunk_finish(
             self.params, jnp.asarray(toks), cp.staging,
             jnp.int32(cp.consumed), jnp.asarray([remaining - 1]),
             self.caches, slot_ids, tables, jnp.asarray([req.rid], jnp.int32),
@@ -446,7 +690,9 @@ class Engine:
         self.metrics.prefill_s += time.perf_counter() - t0
         self.metrics.prefill_tokens += remaining
         self.metrics.prefill_calls += 1
-        self.metrics.prefill_chunks += 1
+        if self.prefill_chunk is not None:
+            self.metrics.prefill_chunks += 1
+        self._finish_prefix_insert(cp, staged_out)
         req.out.append(int(nxt[0]))
         if len(req.out) >= req.max_new:
             req.done = True
@@ -475,7 +721,19 @@ class Engine:
                 rids[s] = req.rid
                 steps[s] = len(req.out)
                 n_active += 1
-        tables = jnp.asarray(self.block_tables) if self.paged else None
+        tables = None
+        if self.paged:
+            tables = self.block_tables
+            if self._chunked:
+                # mid-admission slots decode masked garbage at position 0 —
+                # park their rows on the garbage block so the write can
+                # never land in a reserved block (a warm admission's table
+                # starts with SHARED prefix blocks, which must never be
+                # written in place)
+                tables = tables.copy()
+                for cp in self._chunked:
+                    tables[cp.slot, :] = GARBAGE_BLOCK
+            tables = jnp.asarray(tables)
         t0 = time.perf_counter()
         nxt, self.caches = self._decode(
             self.params, jnp.asarray(toks), self.caches,
@@ -513,12 +771,14 @@ class Engine:
             while pending and free:
                 req = pending[0]
                 self._validate(req)
-                if not self._reserve(req, free[0]):
+                hit = self._match_prefix(req)
+                if not self._reserve(req, free[0], hit):
                     break          # head-of-line: wait for blocks to free
                 pending.pop(0)
                 slot = free.pop(0)
-                if self._chunkable(len(req.prompt)):
-                    self._start_chunked(req, slot)
+                lone = not batch and len(pending) == 0
+                if self._route_staged(req, hit, lone):
+                    self._start_staged(req, slot, hit)
                 else:
                     batch.append(req)
                     batch_slots.append(slot)

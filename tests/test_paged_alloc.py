@@ -7,7 +7,12 @@ Invariants the engine's reservation logic leans on:
     full release cycle restores the initial free count;
   * backpressure ordering: an alloc that fails (pool short) changes
     nothing, and the exact same request succeeds once enough blocks are
-    released.
+    released;
+  * refcount / copy-on-write (prefix sharing): a block written at
+    admission is solely owned at write time, shared blocks always carry
+    >= 2 owners, a block returns to the free pool ONLY at refcount 0, and
+    pool accounting stays exact through random admit / evict / finish
+    sequences.
 """
 import pytest
 
@@ -18,6 +23,7 @@ from hypothesis import given, settings  # noqa: E402
 from hypothesis import strategies as st  # noqa: E402
 
 from repro.serve.paged import GARBAGE_BLOCK, BlockAllocator, blocks_needed
+from repro.serve.prefix_cache import PrefixCache
 
 
 @settings(max_examples=60, deadline=None)
@@ -67,6 +73,75 @@ def test_failed_alloc_succeeds_after_release(num_blocks, want):
         assert got is not None and len(got) == want
     else:
         assert a.alloc(want) is None          # can never fit: stays None
+
+
+@settings(max_examples=60, deadline=None)
+@given(data=st.data())
+def test_refcount_cow_invariants(data):
+    """Random admit / finish / evict sequences through the prefix cache:
+
+      * copy-on-write — every block an admission WRITES (its private tail)
+        is solely owned at write time; every shared block has >= 2 owners
+        and is never in the written set;
+      * eviction only at refcount 0 — a block reaches the free pool
+        exactly when its last owner releases it, never earlier;
+      * accounting exact — free + refcounted == capacity after every op,
+        and a full teardown (finish all + sweep the cache) restores the
+        empty pool.
+    """
+    bs = 4
+    num_blocks = data.draw(st.integers(4, 24), label="num_blocks")
+    capacity = num_blocks - 1
+    max_seq = capacity * bs
+    a = BlockAllocator(num_blocks, bs)
+    cache = PrefixCache(block_size=bs, allocator=a, max_nodes=8)
+    live: list[list[int]] = []                # admitted requests' tables
+    token = st.integers(0, 2)                 # tiny alphabet: forces sharing
+    for _ in range(data.draw(st.integers(1, 25), label="n_ops")):
+        op = data.draw(st.sampled_from(["admit", "admit", "finish"]),
+                       label="op")
+        if op == "admit":
+            plen = data.draw(st.integers(1, max_seq - 1), label="plen")
+            prompt = data.draw(st.lists(token, min_size=plen,
+                                        max_size=plen), label="prompt")
+            hit = cache.match(prompt, max_len=plen - 1)
+            shared = list(hit.blocks) if hit else []
+            need = blocks_needed(plen, 1, max_seq, bs) - len(shared)
+            assert need >= 0
+            if shared:                        # ref FIRST: pins the matched
+                a.ref(shared)                 # node against eviction below
+            if need > a.free_blocks:
+                cache.evict_for(need)         # LRU over refcount-0 nodes
+            fresh = a.alloc(need)
+            if fresh is None:
+                if shared:
+                    a.release(shared)         # backpressure: no change
+                continue
+            # COW: the engine writes ONLY the private tail blocks
+            assert all(a.writable(b) for b in fresh)
+            assert all(a.refcount(b) >= 2 and not a.writable(b)
+                       for b in shared)
+            table = shared + fresh
+            nb = plen // bs
+            if nb:
+                cache.insert(prompt[:nb * bs], blocks=table[:nb])
+            live.append(table)
+        elif live:
+            a.release(live.pop(data.draw(
+                st.integers(0, len(live) - 1), label="victim")))
+        # pool accounting exact after every op
+        held = sum(1 for b in range(1, num_blocks) if a.refcount(b) > 0)
+        assert a.free_blocks + held == capacity
+        assert a.used_blocks == held
+        # a block is free iff its refcount is 0 (eviction never jumps it)
+        assert all(a.refcount(b) == 0 for b in a._free_set)
+        # live tables always survive eviction (their refs pin the blocks)
+        assert all(a.refcount(b) >= 1 for t in live for b in t)
+    for t in live:
+        a.release(t)
+    cache.evict_for(num_blocks)               # sweeps every remaining node
+    assert cache.node_count == 0
+    assert a.free_blocks == capacity and a.used_blocks == 0
 
 
 @settings(max_examples=60, deadline=None)

@@ -1,0 +1,278 @@
+"""Prefix-cache subsystem: radix-tree mechanics + warm-admission parity.
+
+The load-bearing pins:
+  * warm-prefix admission is TOKEN-IDENTICAL to cold prefill for the
+    transformer (paged, with and without chunked prefill), mamba2 (dense
+    state snapshots) and zamba2 (paged blocks + snapshot, split substrate);
+  * shared pool blocks are never written in place (copy-on-write): their
+    contents are bit-identical before and after a warm admission decodes;
+  * eviction frees cache-held blocks under pool pressure and admission
+    still completes correctly.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.registry import get_config, get_model
+from repro.serve.engine import Engine, Request
+from repro.serve.paged import BlockAllocator
+from repro.serve.prefix_cache import PrefixCache
+
+
+def _setup(arch="yi-9b", **over):
+    cfg = get_config(arch).reduced(dtype="float32", attn_impl="full", **over)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    return cfg, params
+
+
+def _shared_head_prompts(cfg, head_len=18, tails=(6, 5, 7), seed=0):
+    """The shared-system-prompt shape: one head, divergent tails."""
+    rng = np.random.default_rng(seed)
+    head = rng.integers(1, cfg.vocab_size, head_len).tolist()
+    return [head + rng.integers(1, cfg.vocab_size, n).tolist()
+            for n in tails]
+
+
+def _serve_each(eng, prompts, max_new=5):
+    """One request at a time (isolates warm-hit behavior from batching)."""
+    reqs = [Request(rid=i, prompt=p, max_new=max_new)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        assert eng.serve([r])["done"]
+    return [r.out for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# radix-tree mechanics (host-side, no model)
+# ---------------------------------------------------------------------------
+
+def test_radix_insert_match_split_blocks():
+    a = BlockAllocator(20, 4)
+    pc = PrefixCache(block_size=4, allocator=a, max_nodes=32)
+    p1 = list(range(1, 13))                   # 12 tokens = 3 whole blocks
+    b1 = a.alloc(3)
+    pc.insert(p1, blocks=b1)
+    assert all(a.refcount(b) == 2 for b in b1)    # request + cache
+
+    h = pc.match(p1, max_len=11)              # same prompt, tail reserved
+    assert h.length == 8 and h.blocks == b1[:2]
+    h = pc.match(p1 + [77], max_len=12)       # strict extension: all blocks
+    assert h.length == 12 and h.blocks == b1
+
+    # divergent tail: partial-edge hit still shares the head's whole blocks
+    p2 = p1[:10] + [99, 98]
+    h = pc.match(p2, max_len=11)
+    assert h.length == 8 and h.blocks == b1[:2]
+
+    # inserting the divergent prompt splits the edge; the new internal node
+    # derives the shared head's block prefix (and co-owns it)
+    b2 = a.alloc(3)
+    pc.insert(p2, blocks=b2)
+    assert a.refcount(b1[0]) == 3             # request + leaf + split node
+    h = pc.match(p1[:10] + [55, 56], max_len=11)
+    assert h.length == 8 and h.blocks == b1[:2]
+
+
+def test_radix_state_snapshots_match_exact_boundary_only():
+    pc = PrefixCache(max_nodes=8)             # recurrent-dense backend
+    pc.insert([1, 2, 3], state="s3")
+    pc.insert([1, 2, 3, 4, 5], state="s5")
+    h = pc.match([1, 2, 3, 4, 5, 6], max_len=5, need_state=True)
+    assert h.length == 5 and h.state == "s5"
+    # the deeper snapshot is beyond max_len: fall back to the ancestor
+    h = pc.match([1, 2, 3, 4, 5], max_len=4, need_state=True)
+    assert h.length == 3 and h.state == "s3"
+    # a state snapshot never serves a partial (mid-edge) match
+    assert pc.match([1, 2, 9], max_len=2, need_state=True) is None
+    assert pc.match([9, 9], max_len=1, need_state=True) is None
+
+
+def test_lru_eviction_on_node_budget():
+    pc = PrefixCache(max_nodes=2)
+    pc.insert([1, 1], state="a")
+    pc.insert([2, 2], state="b")
+    assert pc.match([1, 1, 5], max_len=2, need_state=True).state == "a"
+    pc.insert([3, 3], state="c")              # over budget: LRU leaf "b" goes
+    assert pc.evictions == 1 and pc.node_count == 2
+    assert pc.match([2, 2, 5], max_len=2, need_state=True) is None
+    assert pc.match([1, 1, 5], max_len=2, need_state=True).state == "a"
+
+
+def test_pool_shortage_evicts_only_unreferenced_nodes():
+    a = BlockAllocator(6, 4)                  # 5 usable blocks
+    pc = PrefixCache(block_size=4, allocator=a, max_nodes=32)
+    b1 = a.alloc(2)
+    pc.insert([1] * 8, blocks=b1)
+    a.release(b1)                             # request done: cache-only refs
+    b2 = a.alloc(2)
+    pc.insert([2] * 8, blocks=b2)             # this "request" stays live
+    assert a.free_blocks == 1
+    assert pc.evict_for(3) == 1               # only the unreferenced node
+    assert a.free_blocks == 3
+    assert pc.match([1] * 8 + [9], max_len=8) is None
+    assert pc.match([2] * 8 + [9], max_len=8).blocks == b2
+    # the live node's blocks never left the pool
+    assert all(a.refcount(b) == 2 for b in b2)
+
+
+# ---------------------------------------------------------------------------
+# warm admission == cold prefill, per family
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [{}, {"prefill_chunk": 8}],
+                         ids=["bucketed", "chunked"])
+def test_warm_transformer_paged_matches_cold(kw):
+    """Acceptance pin: the attention family under Engine(paged=True) —
+    copy-on-write block sharing — is token-identical to cold prefill, with
+    and without chunked prefill composing."""
+    cfg, params = _setup()
+    prompts = _shared_head_prompts(cfg)
+    cold = Engine(cfg, params, max_batch=2, max_seq=48, paged=True,
+                  block_size=8, **kw)
+    ref = _serve_each(cold, prompts)
+    warm = Engine(cfg, params, max_batch=2, max_seq=48, paged=True,
+                  block_size=8, prefix_cache=True, **kw)
+    outs = _serve_each(warm, prompts)
+    assert outs == ref
+    # prompts 2 and 3 share the 18-token head: 2 whole blocks reused each
+    assert warm.metrics.prefix_hits == 2
+    assert warm.metrics.prefix_tokens_reused == 32
+
+
+@pytest.mark.parametrize("kw", [{}, {"prefill_chunk": 8}],
+                         ids=["bucketed", "chunked"])
+def test_warm_mamba2_matches_cold(kw):
+    """Acceptance pin: the recurrent family reuses dense (conv, ssd) state
+    snapshots captured from the state-continuing scan."""
+    cfg, params = _setup("mamba2-1.3b")
+    prompts = _shared_head_prompts(cfg)
+    prompts.append(prompts[0] + [7, 8, 9])    # strict prefix extension
+    cold = Engine(cfg, params, max_batch=2, max_seq=48, **kw)
+    ref = _serve_each(cold, prompts, max_new=4)
+    warm = Engine(cfg, params, max_batch=2, max_seq=48, prefix_cache=True,
+                  **kw)
+    outs = _serve_each(warm, prompts, max_new=4)
+    assert outs == ref
+    assert warm.metrics.prefix_hits >= 2
+    assert warm.metrics.prefix_tokens_reused >= 32
+
+
+@pytest.mark.parametrize("kw", [{}, {"prefill_chunk": 8}],
+                         ids=["bucketed", "chunked"])
+def test_warm_zamba2_paged_matches_cold(kw):
+    """Acceptance pin: the hybrid's split substrate warms BOTH halves —
+    shared attention blocks (COW) and the SSM state snapshot — at one
+    block-aligned boundary."""
+    cfg, params = _setup("zamba2-1.2b")
+    prompts = _shared_head_prompts(cfg)
+    cold = Engine(cfg, params, max_batch=2, max_seq=48, paged=True,
+                  block_size=8, **kw)
+    ref = _serve_each(cold, prompts, max_new=4)
+    warm = Engine(cfg, params, max_batch=2, max_seq=48, paged=True,
+                  block_size=8, prefix_cache=True, **kw)
+    outs = _serve_each(warm, prompts, max_new=4)
+    assert outs == ref
+    assert warm.metrics.prefix_hits >= 1
+    assert warm.metrics.prefix_tokens_reused >= 16
+
+
+def test_shared_blocks_never_written_in_place():
+    """COW pin: the pool content of every cache-shared block is
+    bit-identical before and after a warm admission prefills + decodes."""
+    cfg, params = _setup()
+    prompts = _shared_head_prompts(cfg, tails=(6, 5))
+    eng = Engine(cfg, params, max_batch=2, max_seq=48, paged=True,
+                 block_size=8, prefix_cache=True)
+    _serve_each(eng, prompts[:1])
+    hit = eng.prefix_cache.match(prompts[1], max_len=len(prompts[1]) - 1)
+    assert hit is not None and len(hit.blocks) == 2
+    ids = jnp.asarray(hit.blocks)
+
+    def pool_snapshot():
+        return [np.asarray(jnp.take(leaf, ids, axis=ax))
+                for leaf, ax, is_pool in zip(
+                    jax.tree.leaves(eng.caches),
+                    jax.tree.leaves(eng._batch_axes),
+                    jax.tree.leaves(eng._paged_leaves)) if is_pool]
+
+    before = pool_snapshot()
+    _serve_each(eng, prompts[1:])             # warm admission + decode
+    assert eng.metrics.prefix_hits == 1
+    for a, b in zip(before, pool_snapshot()):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_eviction_under_pool_pressure_keeps_serving():
+    """A pool too small to hold every cached prefix evicts LRU nodes at
+    admission and the workload still completes token-identically."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(1, cfg.vocab_size, 24).tolist()
+               for _ in range(3)]             # disjoint: each caches 3 blocks
+    cold = Engine(cfg, params, max_batch=1, max_seq=48, paged=True,
+                  block_size=8, num_blocks=8)
+    ref = _serve_each(cold, prompts, max_new=4)
+    warm = Engine(cfg, params, max_batch=1, max_seq=48, paged=True,
+                  block_size=8, num_blocks=8, prefix_cache=True)
+    outs = _serve_each(warm, prompts, max_new=4)
+    assert outs == ref
+    assert warm.metrics.cache_evictions >= 1
+    # the cache's surviving refs are exactly the outstanding pool blocks,
+    # and a full sweep returns every one of them
+    assert warm.allocator.used_blocks > 0
+    warm.prefix_cache.evict_for(warm.num_blocks)
+    assert warm.allocator.used_blocks == 0
+
+
+def test_prefix_cache_construction_contract():
+    cfg, params = _setup()
+    with pytest.raises(ValueError, match="prefix_cache"):
+        Engine(cfg, params, max_batch=1, max_seq=32, prefix_cache=True)
+    cfg_h, params_h = _setup("zamba2-1.2b")
+    with pytest.raises(ValueError, match="prefix_cache"):
+        Engine(cfg_h, params_h, max_batch=1, max_seq=32, prefix_cache=True)
+    cfg_s, params_s = _setup("mamba2-1.3b")
+    Engine(cfg_s, params_s, max_batch=1, max_seq=32, prefix_cache=True)
+
+
+def test_warm_metrics_accounting():
+    """prefill_tokens counts only re-prefilled tokens; the reused head is
+    accounted separately (their sum is the full prompt)."""
+    cfg, params = _setup("mamba2-1.3b")
+    p1 = _shared_head_prompts(cfg, tails=(6,))[0]
+    eng = Engine(cfg, params, max_batch=1, max_seq=48, prefix_cache=True)
+    _serve_each(eng, [p1], max_new=3)
+    base = eng.metrics.prefill_tokens
+    r = Request(rid=9, prompt=p1 + [3, 1, 4], max_new=3)
+    assert eng.serve([r])["done"]
+    reused = eng.metrics.prefix_tokens_reused
+    assert reused == len(p1)                  # whole first prompt reused
+    assert eng.metrics.prefill_tokens - base == len(r.prompt) - reused
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,kw", [
+    ("yi-9b", {"paged": True, "block_size": 8}),
+    ("yi-9b", {"paged": True, "block_size": 8, "prefill_chunk": 8}),
+    ("mamba2-1.3b", {}),
+    ("mamba2-1.3b", {"prefill_chunk": 8}),
+    ("zamba2-1.2b", {"paged": True, "block_size": 8}),
+    ("zamba2-1.2b", {"paged": True, "block_size": 8, "prefill_chunk": 8}),
+])
+def test_warm_concurrent_workload_parity_slow(arch, kw):
+    """Nightly tier: a 6-request shared-head workload served CONCURRENTLY
+    (slot contention, warm admissions interleaved with decode ticks) is
+    token-identical with and without the prefix cache."""
+    cfg, params = _setup(arch)
+    prompts = _shared_head_prompts(cfg, head_len=24, tails=(6, 5, 7, 9, 4, 8))
+    outs = {}
+    for warm in (False, True):
+        eng = Engine(cfg, params, max_batch=3, max_seq=64,
+                     prefix_cache=warm, **kw)
+        reqs = [Request(rid=i, prompt=p, max_new=5)
+                for i, p in enumerate(prompts)]
+        assert eng.serve(reqs)["done"]
+        outs[warm] = [r.out for r in reqs]
+    assert outs[True] == outs[False]
