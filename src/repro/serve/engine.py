@@ -465,7 +465,7 @@ class Engine:
             g = jnp.take(pool, tbl, axis=ax)      # (..., 1, nblk, bs, ...)
             return g.reshape(stg.shape)
 
-        return jax.tree.map(one, staging, self.caches, self._batch_axes,
+        return jax.tree.map(one, staging, caches, self._batch_axes,
                             self._paged_leaves)
 
     def _seed_staging(self, hit):
@@ -764,16 +764,26 @@ class Engine:
         start = replace(self.metrics)
         t0 = time.time()
         ticks = 0
+        stall = None               # (rid, free_blocks) at the last failure
         while (pending or self.active or self._chunked) \
                 and ticks < max_ticks:
             free = [s for s, r in enumerate(self.slots) if r is None]
             batch, batch_slots = [], []
             while pending and free:
                 req = pending[0]
+                # a backpressured head retries only once blocks have freed:
+                # re-matching every tick would walk the radix tree, churn
+                # ref/release on the shared blocks, and re-stamp the matched
+                # path's LRU age for nothing
+                if stall is not None and stall[0] == req.rid \
+                        and self.allocator.free_blocks <= stall[1]:
+                    break
                 self._validate(req)
                 hit = self._match_prefix(req)
                 if not self._reserve(req, free[0], hit):
+                    stall = (req.rid, self.allocator.free_blocks)
                     break          # head-of-line: wait for blocks to free
+                stall = None
                 pending.pop(0)
                 slot = free.pop(0)
                 lone = not batch and len(pending) == 0

@@ -291,6 +291,12 @@ class PrefixCache:
 
     def _evict(self, node: _Node) -> None:
         assert not node.children and node.parent is not None
+        # only payload-bearing nodes count as evictions: the recursive
+        # cleanup of payload-less structural parents below drops no cached
+        # boundary, so it must not inflate the metric past the evict_for/
+        # trim return values
+        if node.blocks is not None or node.state is not None:
+            self.evictions += 1
         if node.blocks is not None:
             self._own(node.blocks, -1)
             self.allocator.release(node.blocks)   # frees only at refcount 0
@@ -298,7 +304,6 @@ class PrefixCache:
         node.state = None
         node.parent.children.pop(node.edge[0])
         self.node_count -= 1
-        self.evictions += 1
         parent = node.parent
         # structural nodes left payload-less and childless are dead weight
         if (parent is not self._root and not parent.children

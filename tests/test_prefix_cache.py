@@ -178,6 +178,33 @@ def test_warm_zamba2_paged_matches_cold(kw):
     assert warm.metrics.prefix_tokens_reused >= 16
 
 
+@pytest.mark.parametrize("kw", [{}, {"prefill_chunk": 8}],
+                         ids=["bucketed", "chunked"])
+def test_warm_two_prefix_families_sequential(kw):
+    """Regression pin: cold A, warm A, cold B, warm B.  The warm-B gather
+    reads pool blocks written AFTER the first warm admission compiled
+    _seed_gather, so a gather that baked the pool in as a trace-time
+    constant (instead of reading the traced ``caches`` argument) returns
+    stale KV and diverges here."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(11)
+    head_a = rng.integers(1, cfg.vocab_size, 18).tolist()
+    head_b = rng.integers(1, cfg.vocab_size, 18).tolist()
+    prompts = [head_a + rng.integers(1, cfg.vocab_size, 6).tolist(),
+               head_a + rng.integers(1, cfg.vocab_size, 5).tolist(),
+               head_b + rng.integers(1, cfg.vocab_size, 6).tolist(),
+               head_b + rng.integers(1, cfg.vocab_size, 5).tolist()]
+    cold = Engine(cfg, params, max_batch=2, max_seq=48, paged=True,
+                  block_size=8, **kw)
+    ref = _serve_each(cold, prompts)
+    warm = Engine(cfg, params, max_batch=2, max_seq=48, paged=True,
+                  block_size=8, prefix_cache=True, **kw)
+    outs = _serve_each(warm, prompts)
+    assert outs == ref
+    assert warm.metrics.prefix_hits == 2      # warm A and warm B
+    assert warm.metrics.prefix_tokens_reused == 32
+
+
 def test_shared_blocks_never_written_in_place():
     """COW pin: the pool content of every cache-shared block is
     bit-identical before and after a warm admission prefills + decodes."""
