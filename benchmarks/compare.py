@@ -81,6 +81,28 @@ def check_prefix_win(current: dict) -> list[str]:
     return fails
 
 
+def check_latency_order(current: dict) -> list[str]:
+    """Absolute request-lifecycle gate on the ``latency`` section: the
+    priority scheduler must actually prioritize — high-priority p95 TTFT
+    strictly below low-priority p95 TTFT under the mixed-load scenario.
+    The section itself is required: a run without it silently dropped the
+    scenario."""
+    lat = current.get("latency")
+    if not lat:
+        return ["latency: section missing from the current run "
+                "(priority_mixed_load scenario dropped?)"]
+    hi, lo = lat.get("high"), lat.get("low")
+    if not hi or not lo:
+        return ["latency: high/low priority rows missing"]
+    h, lw = hi.get("ttft_p95_s"), lo.get("ttft_p95_s")
+    if h is None or lw is None:
+        return ["latency: ttft_p95_s missing from high/low rows"]
+    if h >= lw:
+        return [f"latency: high-priority p95 TTFT {h * 1e3:,.1f} ms does "
+                f"not beat low-priority {lw * 1e3:,.1f} ms"]
+    return []
+
+
 def markdown_table(rows, threshold: float) -> str:
     def fmt(v):
         return "—" if v is None else f"{v:,.1f}"
@@ -115,26 +137,34 @@ def main() -> None:
 
     rows, regressions, missing = compare(baseline, current, args.threshold)
     prefix_fails = check_prefix_win(current)
+    latency_fails = check_latency_order(current)
+    abs_fails = prefix_fails + latency_fails
     table = markdown_table(rows, args.threshold)
-    if prefix_fails:
-        table += "\n" + "\n".join(f"❌ {m}" for m in prefix_fails) + "\n"
-    elif current.get("prefix"):
-        wins = ", ".join(f"{a} {r['speedup']:.2f}x"
-                         for a, r in current["prefix"].items()
-                         if "speedup" in r)
-        table += f"\n✅ prefix warm-path win: {wins}\n"
+    if abs_fails:
+        table += "\n" + "\n".join(f"❌ {m}" for m in abs_fails) + "\n"
+    else:
+        if current.get("prefix"):
+            wins = ", ".join(f"{a} {r['speedup']:.2f}x"
+                             for a, r in current["prefix"].items()
+                             if "speedup" in r)
+            table += f"\n✅ prefix warm-path win: {wins}\n"
+        lat = current.get("latency", {})
+        if lat:
+            table += (f"✅ priority split: high p95 TTFT "
+                      f"{lat['high']['ttft_p95_s'] * 1e3:.1f} ms < low "
+                      f"{lat['low']['ttft_p95_s'] * 1e3:.1f} ms\n")
     print(table)
     if args.summary:
         with open(args.summary, "a") as f:
             f.write(table)
 
-    if regressions or missing or prefix_fails:
+    if regressions or missing or abs_fails:
         for p in regressions:
             print(f"FAIL: {p} regressed more than {args.threshold:.0%}",
                   file=sys.stderr)
         for p in missing:
             print(f"FAIL: {p} missing from the current run", file=sys.stderr)
-        for m in prefix_fails:
+        for m in abs_fails:
             print(f"FAIL: {m}", file=sys.stderr)
         sys.exit(1)
     print(f"gate OK: {sum(1 for r in rows if r[4] == 'ok')} metrics within "

@@ -31,6 +31,7 @@ def _build(quant: str, max_batch: int, max_seq: int, arch: str = "yi-9b",
 
     from repro.core.layers import QuantConfig
     from repro.models.registry import get_config, get_model
+    from repro.serve.config import EngineConfig
     from repro.serve.engine import Engine
 
     cfg = get_config(arch).reduced()
@@ -39,8 +40,8 @@ def _build(quant: str, max_batch: int, max_seq: int, arch: str = "yi-9b",
         cfg = replace(cfg, quant=QuantConfig(mode=quant))
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    return cfg, Engine(cfg, params, max_batch=max_batch, max_seq=max_seq,
-                       **engine_kw)
+    econf = EngineConfig(max_batch=max_batch, max_seq=max_seq, **engine_kw)
+    return cfg, Engine(cfg, params, econf)
 
 
 def _steady_decode_tok_s(eng, cfg, mb: int, ticks: int, max_seq: int
@@ -223,6 +224,65 @@ def prefix_shared_system_prompt(quant: str = "bf16", n_requests: int = 6,
     return out
 
 
+def priority_mixed_load(quant: str = "bf16", n_each: int = 6,
+                        max_seq: int = 64, max_new: int = 8,
+                        max_batch: int = 2) -> dict:
+    """Request-lifecycle latency under a mixed priority workload: 2*n_each
+    requests (interleaved high/low priority at submission) contend for
+    ``max_batch`` slots; the scheduler admits priority classes first, so
+    high-priority requests should see strictly lower tail TTFT.
+
+    Reports per-class TTFT and ITL p50/p95 (seconds) for the ``latency``
+    section of ``BENCH_engine.json``.  Acceptance gate
+    (``benchmarks/compare.py``): high-priority p95 TTFT < low-priority
+    p95 TTFT.
+    """
+    import numpy as np
+
+    from repro.serve.engine import Request
+
+    cfg, eng = _build(quant, max_batch, max_seq)
+    rng = np.random.default_rng(3)
+    # compile warm-up off the clock: one bucketed prefill + decode program
+    wu = [Request(rid=900 + i,
+                  prompt=rng.integers(1, cfg.vocab_size, 6).tolist(),
+                  max_new=2)
+          for i in range(max_batch)]
+    assert eng.serve(wu)["done"]
+
+    reqs = []
+    for i in range(2 * n_each):
+        pri = 1 if i % 2 == 0 else 0          # interleaved arrival order
+        reqs.append(Request(
+            rid=i, prompt=rng.integers(1, cfg.vocab_size, 6).tolist(),
+            max_new=max_new, priority=pri))
+    stats = eng.serve(reqs)
+    assert stats["done"]
+
+    out = {}
+    for name, pri in (("high", 1), ("low", 0)):
+        sel = [r for r in reqs if r.priority == pri]
+        ttft = np.asarray([r.token_ts[0] - r.submit_ts for r in sel])
+        itl = np.concatenate([np.diff(np.asarray(r.token_ts))
+                              for r in sel if len(r.token_ts) > 1])
+        out[name] = {
+            "n": len(sel),
+            "ttft_p50_s": float(np.percentile(ttft, 50)),
+            "ttft_p95_s": float(np.percentile(ttft, 95)),
+            "itl_p50_s": float(np.percentile(itl, 50)),
+            "itl_p95_s": float(np.percentile(itl, 95)),
+        }
+        print(f"engine_latency_{name},0,"
+              f"ttft_p50_ms={out[name]['ttft_p50_s'] * 1e3:.1f};"
+              f"ttft_p95_ms={out[name]['ttft_p95_s'] * 1e3:.1f};"
+              f"itl_p50_ms={out[name]['itl_p50_s'] * 1e3:.1f};"
+              f"itl_p95_ms={out[name]['itl_p95_s'] * 1e3:.1f};quant={quant}")
+    ratio = out["high"]["ttft_p95_s"] / max(out["low"]["ttft_p95_s"], 1e-9)
+    print(f"engine_latency_priority_split,0,"
+          f"high_vs_low_p95_ttft_ratio={ratio:.2f}")
+    return out
+
+
 def _admit_long_interleave(quant: str, max_seq: int, chunk: int, arch: str,
                            modes, tag: str = "") -> dict:
     """Shared harness: 3 short requests decode while one (max_seq-1)-token
@@ -300,16 +360,18 @@ def bench_json(path: str = "BENCH_engine.json", batches=DEF_BATCHES,
     of 2*mb mixed-length requests after a steady-state decode measurement;
     plus a ``recurrent`` section — ssm/hybrid engines serving a
     long-prompt-interleave mix under chunked prefill (the hybrid with paged
-    attention pools) — and a ``prefix`` section — the shared-system-prompt
+    attention pools) — a ``prefix`` section — the shared-system-prompt
     scenario, whose warm-vs-cold prefill win ``benchmarks/compare.py``
-    additionally gates in CI.
+    additionally gates in CI — and a ``latency`` section — per-priority
+    TTFT/ITL p50/p95 from the mixed-load scenario, gated on
+    high-priority p95 TTFT beating low.
     """
     import numpy as np
 
     from repro.serve.engine import Request
 
     out = {"quant": quant, "max_seq": max_seq, "ticks": ticks,
-           "per_batch": {}, "recurrent": {}, "prefix": {}}
+           "per_batch": {}, "recurrent": {}, "prefix": {}, "latency": {}}
     for mb in batches:
         cfg, eng = _build(quant, mb, max_seq)
         decode_tok_s = _steady_decode_tok_s(eng, cfg, mb, ticks, max_seq)
@@ -353,6 +415,7 @@ def bench_json(path: str = "BENCH_engine.json", batches=DEF_BATCHES,
               f"prefill_tok_s={stats['prefill_tok_s']:.1f};"
               f"chunks={stats['prefill_chunks']}")
     out["prefix"] = prefix_shared_system_prompt(quant=quant)
+    out["latency"] = priority_mixed_load(quant=quant)
     with open(path, "w") as f:
         json.dump(out, f, indent=2)
     print(f"engine_json,0,wrote={path}")
@@ -373,7 +436,7 @@ def smoke() -> None:
 
 ALL = [decode_throughput, decode_paged_vs_dense, prefill_batched_vs_per_row,
        long_prompt_interleave, recurrent_long_prompt_interleave,
-       prefix_shared_system_prompt]
+       prefix_shared_system_prompt, priority_mixed_load]
 
 
 def main() -> None:

@@ -5,10 +5,9 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def _bench(fn, *args, iters=3):

@@ -7,10 +7,9 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import cost_model as cm
 from repro.core import luna

@@ -4,10 +4,9 @@ multiplier mode (QAT via STE) and compare final task MAE — the paper's
 
 Run:  PYTHONPATH=src python examples/fig13_nn_accuracy.py
 """
-import numpy as np
-
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.quant import ste_luna_matmul
 

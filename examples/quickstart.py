@@ -8,10 +8,9 @@
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
-
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import cost_model as cm
 from repro.core.layers import QuantConfig

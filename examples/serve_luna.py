@@ -4,7 +4,8 @@ The paper's CiM setting is inference: weights stationary in SRAM, inputs
 streamed through the LUT multipliers.  The serving engine is the system
 analogue — weights resident, requests streamed through batched prefill and
 mixed-depth continuous-batching decode with every projection in the chosen
-LUNA mode.
+LUNA mode.  This example also shows the v2 request lifecycle: one request
+is streamed token-by-token through its ``RequestHandle``.
 
 Run:  PYTHONPATH=src python examples/serve_luna.py --quant luna_approx2 \
           --sampling top_k --top-k 20
@@ -19,8 +20,8 @@ import numpy as np  # noqa: E402
 
 from repro.core.layers import QuantConfig  # noqa: E402
 from repro.models.registry import get_config, get_model  # noqa: E402
+from repro.serve.config import EngineConfig  # noqa: E402
 from repro.serve.engine import Engine, Request  # noqa: E402
-from repro.serve.sampling import SamplingConfig  # noqa: E402
 
 
 def main():
@@ -28,26 +29,14 @@ def main():
     ap.add_argument("--quant", default="luna_approx")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=12)
-    ap.add_argument("--sampling", default="greedy",
-                    choices=["greedy", "temperature", "top_k"])
-    ap.add_argument("--temperature", type=float, default=0.8)
-    ap.add_argument("--top-k", type=int, default=40)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--paged", action="store_true",
-                    help="paged-block KV cache (per-request block budgets)")
-    ap.add_argument("--prefill-chunk", type=int, default=None,
-                    help="chunked prefill: admit long prompts N tokens at a "
-                         "time, interleaved with decode ticks")
+    EngineConfig.add_cli_args(ap)
+    ap.set_defaults(max_batch=4, max_seq=96)
     args = ap.parse_args()
 
     cfg = get_config("yi-9b").reduced(quant=QuantConfig(mode=args.quant))
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    sampling = SamplingConfig(mode=args.sampling,
-                              temperature=args.temperature, top_k=args.top_k)
-    engine = Engine(cfg, params, max_batch=4, max_seq=96,
-                    sampling=sampling, seed=args.seed, paged=args.paged,
-                    prefill_chunk=args.prefill_chunk)
+    engine = Engine(cfg, params, EngineConfig.from_args(args))
 
     rng = np.random.default_rng(0)
     # deliberately mixed prompt lengths: the engine buckets them for prefill
@@ -55,7 +44,8 @@ def main():
     reqs = [Request(rid=i,
                     prompt=rng.integers(
                         1, cfg.vocab_size, int(rng.integers(3, 9))).tolist(),
-                    max_new=args.max_new)
+                    max_new=args.max_new,
+                    priority=1 if i == 0 else 0)
             for i in range(args.requests)]
     stats = engine.serve(reqs)
     print(f"served {len(reqs)} requests in {stats['ticks']} ticks "
@@ -68,6 +58,14 @@ def main():
     for r in reqs[:3]:
         print(f"  req {r.rid}: prompt {r.prompt} -> {r.out}")
     assert stats["done"]
+
+    # v2 lifecycle: stream one more request incrementally off its handle
+    handle = engine.submit(Request(
+        rid=99, prompt=rng.integers(1, cfg.vocab_size, 5).tolist(),
+        max_new=6, priority=1))
+    streamed = list(handle.tokens())
+    print(f"  streamed req 99: {streamed}")
+    assert streamed == handle.out
 
 
 if __name__ == "__main__":

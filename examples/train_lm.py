@@ -12,7 +12,7 @@ import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
 
-import jax  # noqa: E402
+import jax  # noqa: E402,F401  (initializes XLA under the forced host flags)
 
 from repro.configs.base import ModelConfig  # noqa: E402
 from repro.core.layers import QuantConfig  # noqa: E402

@@ -18,9 +18,8 @@ import threading
 from pathlib import Path
 from typing import Any
 
-import numpy as np
-
 import jax
+import numpy as np
 
 
 def _flatten(tree: Any) -> dict[str, np.ndarray]:

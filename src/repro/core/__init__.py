@@ -1,8 +1,8 @@
 """The paper's primary contribution: LUNA-CIM LUT-based D&C multiplication,
 quantization substrate, hardware cost model, and the LunaDense layer."""
-from repro.core.luna import (LunaMode, luna_matmul, luna_product,
-                             combine_partials, split_digits)
 from repro.core.layers import QuantConfig, quant_matmul
+from repro.core.luna import (LunaMode, combine_partials, luna_matmul,
+                             luna_product, split_digits)
 from repro.core.quant import QParams, calibrate, dequantize, quantize
 
 __all__ = [

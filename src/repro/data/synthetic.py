@@ -8,10 +8,9 @@ exact stream with no data-state checkpointing.
 """
 from __future__ import annotations
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class SyntheticLM:

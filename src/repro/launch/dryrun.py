@@ -27,13 +27,13 @@ import jax.numpy as jnp
 
 from repro.configs.base import ALL_SHAPES
 from repro.launch.mesh import make_production_mesh
-from repro.parallel.act_sharding import activation_sharding
 from repro.launch.roofline import (active_params, collective_bytes,
                                    count_params, model_flops, roofline_terms)
 from repro.models.registry import (ARCH_IDS, cell_supported, get_config,
                                    get_model, input_specs)
 from repro.optim.adamw import AdamW
 from repro.parallel import sharding as shd
+from repro.parallel.act_sharding import activation_sharding
 from repro.train.train_step import make_train_step
 
 RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
@@ -41,7 +41,7 @@ RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
 
 def _sds_tree(tree):
     return jax.tree.map(
-        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
 
 
 def lower_cell(arch: str, shape_name: str, multi_pod: bool,
@@ -274,7 +274,8 @@ def main():
                     print(f"   ok: compile={rec['compile_s']}s "
                           f"dominant={rec['dominant']} "
                           f"roofline={rec['roofline_fraction']:.3f} "
-                          f"peak/dev={rec['memory_analysis']['bytes_per_device_peak_estimate']/2**30:.2f}GiB",
+                          f"peak/dev="
+                          f"{rec['memory_analysis']['bytes_per_device_peak_estimate']/2**30:.2f}GiB",
                           flush=True)
                 elif rec["status"] == "skip":
                     print(f"   skip: {rec['reason']}")

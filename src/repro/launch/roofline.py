@@ -144,7 +144,7 @@ def analytic_flops(cfg, shape) -> float:
 def count_params(params_shape) -> int:
     import jax
     import numpy as np
-    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(params_shape)))
+    return int(sum(np.prod(a.shape) for a in jax.tree.leaves(params_shape)))
 
 
 def active_params(cfg, n_params: int) -> int:

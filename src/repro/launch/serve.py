@@ -2,6 +2,10 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --reduced \
       --quant luna_approx --requests 8 --sampling top_k --top-k 40
+
+Engine knobs are single-sourced in ``repro.serve.config.EngineConfig`` —
+``EngineConfig.add_cli_args`` registers the flags, ``from_args`` builds the
+validated config.
 """
 from __future__ import annotations
 
@@ -9,41 +13,16 @@ import argparse
 
 
 def main():
+    from repro.serve.config import EngineConfig
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-9b")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--quant", default="bf16")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--max-seq", type=int, default=128)
-    ap.add_argument("--prefill-bucket", type=int, default=16,
-                    help="prompt lengths are padded up to multiples of this "
-                         "and prefilled one jit call per bucket")
-    ap.add_argument("--paged", action="store_true",
-                    help="paged-block KV cache: per-request block "
-                         "reservation instead of full max-seq rows "
-                         "(attention families)")
-    ap.add_argument("--block-size", type=int, default=16,
-                    help="tokens per KV block in --paged mode")
-    ap.add_argument("--num-blocks", type=int, default=None,
-                    help="pool size in blocks (default: dense-equivalent "
-                         "capacity + the reserved garbage block)")
-    ap.add_argument("--prefill-chunk", type=int, default=None,
-                    help="admit prompts longer than this in N-token chunks "
-                         "interleaved with decode ticks")
-    ap.add_argument("--prefix-cache", action="store_true",
-                    help="radix-tree prompt-prefix sharing: warm "
-                         "admissions reuse cached KV blocks (attention, "
-                         "needs --paged) or recurrent state snapshots "
-                         "(ssm) and prefill only the uncached tail")
-    ap.add_argument("--prefix-cache-nodes", type=int, default=256,
-                    help="LRU budget for cached prefix boundaries")
-    ap.add_argument("--sampling", default="greedy",
-                    choices=["greedy", "temperature", "top_k"])
-    ap.add_argument("--temperature", type=float, default=1.0)
-    ap.add_argument("--top-k", type=int, default=40)
-    ap.add_argument("--seed", type=int, default=0)
+    EngineConfig.add_cli_args(ap)
+    ap.set_defaults(max_batch=4, max_seq=128)
     args = ap.parse_args()
 
     import jax
@@ -52,7 +31,6 @@ def main():
     from repro.core.layers import QuantConfig
     from repro.models.registry import get_config, get_model
     from repro.serve.engine import Engine, Request
-    from repro.serve.sampling import SamplingConfig
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -63,17 +41,7 @@ def main():
 
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    sampling = SamplingConfig(mode=args.sampling,
-                              temperature=args.temperature,
-                              top_k=args.top_k)
-    engine = Engine(cfg, params, max_batch=args.max_batch,
-                    max_seq=args.max_seq, sampling=sampling,
-                    seed=args.seed, prefill_bucket=args.prefill_bucket,
-                    paged=args.paged, block_size=args.block_size,
-                    num_blocks=args.num_blocks,
-                    prefill_chunk=args.prefill_chunk,
-                    prefix_cache=args.prefix_cache,
-                    prefix_cache_nodes=args.prefix_cache_nodes)
+    engine = Engine(cfg, params, EngineConfig.from_args(args))
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(1, cfg.vocab_size, 6).tolist(),

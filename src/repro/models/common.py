@@ -1,9 +1,44 @@
 """Shared model building blocks (pure-functional, param-dict style)."""
 from __future__ import annotations
 
+from dataclasses import dataclass
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+@dataclass(frozen=True)
+class CacheSpec:
+    """Cache-layout request: THE uniform ``init_cache`` contract.
+
+    Every family exposes ``init_cache(batch, s_max, *, spec=None)``.  With
+    ``spec=None`` (or a spec without paging) the cache is a dense slab of
+    per-slot (batch, s_max, ...) rows.  A paged spec turns every pageable
+    KV leaf into a pool of ``num_blocks`` fixed ``block_size``-token blocks
+    indexed via per-row block tables (families without pageable leaves —
+    recurrent state, modality caches — must reject a paged spec rather
+    than silently ignore it)."""
+    block_size: int | None = None
+    num_blocks: int | None = None
+
+    def __post_init__(self):
+        if (self.block_size is None) != (self.num_blocks is None):
+            raise ValueError(
+                "CacheSpec paging needs BOTH block_size and num_blocks "
+                f"(got block_size={self.block_size}, "
+                f"num_blocks={self.num_blocks})")
+
+    @property
+    def paged(self) -> bool:
+        return self.block_size is not None
+
+
+def reject_paged_spec(spec: CacheSpec | None, family: str, why: str) -> None:
+    """Shared guard for families with nothing to page."""
+    if spec is not None and spec.paged:
+        raise ValueError(f"family {family!r} rejects a paged CacheSpec: "
+                         f"{why}")
 
 
 def dtype_of(cfg) -> jnp.dtype:

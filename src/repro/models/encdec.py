@@ -14,7 +14,8 @@ from repro.core.layers import quant_matmul
 from repro.models import attention as attn_mod
 from repro.models.attention import KVCache, init_gqa
 from repro.models.common import (dense_init, embed_init, gather_last,
-                                 rms_norm, remat_policy_of, token_positions)
+                                 reject_paged_spec, remat_policy_of,
+                                 rms_norm, token_positions)
 from repro.models.mlp import init_mlp, mlp
 from repro.models.transformer import chunked_xent
 
@@ -137,7 +138,11 @@ class EncDecLM:
                             unroll=not self.cfg.scan_layers)
         return xent, {"xent": xent}
 
-    def init_cache(self, batch: int, s_max: int):
+    def init_cache(self, batch: int, s_max: int, *, spec=None):
+        """Uniform contract: decoder self-attention KV only; a paged spec
+        is rejected (the engine does not page modality backbones yet)."""
+        reject_paged_spec(spec, "encdec", "the decoder KV slab is served "
+                          "dense (no engine-managed block tables)")
         cfg = self.cfg
         dt = jnp.dtype(cfg.dtype)
         hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
@@ -153,8 +158,11 @@ class EncDecLM:
         logits = quant_matmul(last, params["lm_head"], None)
         return logits, (new_caches, enc_out)
 
-    def decode_step(self, params, token, state, index):
-        """``index``: scalar or (B,) per-row decoder positions."""
+    def decode_step(self, params, token, state, index, *, tables=None):
+        """``index``: scalar or (B,) per-row decoder positions.  ``tables``
+        must be None (dense decoder KV) — accepted for the uniform engine
+        contract."""
+        assert tables is None, "encdec caches are dense (no block table)"
         caches, enc_out = state
         hidden, new_caches = self.decode(params, token, enc_out,
                                          caches=caches, cache_index=index)

@@ -17,7 +17,7 @@ from repro.core.layers import quant_matmul
 from repro.models import attention as attn_mod
 from repro.models.attention import KVCache, init_gqa
 from repro.models.common import (dense_init, embed_init, gather_last,
-                                 rms_norm, remat_policy_of, token_positions)
+                                 remat_policy_of, rms_norm, token_positions)
 from repro.models.mlp import init_mlp, mlp
 from repro.models.ssm import (SSMCache, init_mamba2, mamba2_block,
                               snapshot_row, ssm_cache_shape)
@@ -140,10 +140,9 @@ class HybridLM:
                             unroll=not self.cfg.scan_layers)
         return xent, {"xent": xent}
 
-    def init_cache(self, batch: int, s_max: int, *, block_size=None,
-                   num_blocks=None):
-        """SPLIT SUBSTRATE: with ``block_size``/``num_blocks`` the shared
-        attention block's KV leaves become paged pools
+    def init_cache(self, batch: int, s_max: int, *, spec=None):
+        """SPLIT SUBSTRATE: with a paged ``spec`` the shared attention
+        block's KV leaves become paged pools
         (num_blocks, block_size, Hkv, Dh) shared by all slots (one block
         table per slot, reused by every group), while the recurrent SSM
         state — O(1) per slot, nothing to page — stays dense (L, B, ...)."""
@@ -151,9 +150,9 @@ class HybridLM:
         hc = cfg.hybrid
         dt = jnp.dtype(cfg.dtype)
         hd = cfg.d_model // hc.shared_num_heads
-        if block_size is not None:
-            assert num_blocks is not None, "paged cache needs num_blocks"
-            kv_shape = (num_blocks, block_size, hc.shared_num_kv_heads, hd)
+        if spec is not None and spec.paged:
+            kv_shape = (spec.num_blocks, spec.block_size,
+                        hc.shared_num_kv_heads, hd)
         else:
             kv_shape = (batch, s_max, hc.shared_num_kv_heads, hd)
         attn_caches = [KVCache(jnp.zeros(kv_shape, dt),
@@ -194,13 +193,13 @@ class HybridLM:
         logits = quant_matmul(last, params["lm_head"], None)
         return logits, new_caches
 
-    def decode_step(self, params, token, caches, index, block_tables=None):
+    def decode_step(self, params, token, state, index, *, tables=None):
         """``index``: scalar or (B,) per-row positions (attention caches
         honor per-row depths; the SSM state recurrence is position-free).
-        ``block_tables``: (B, nblk) int32 when the ATTENTION leaves are
-        paged pools (split substrate) — the SSM state is always dense."""
-        hidden, new_caches = self.forward(params, token, caches=caches,
+        ``tables``: (B, nblk) int32 when the ATTENTION leaves are paged
+        pools (split substrate) — the SSM state is always dense."""
+        hidden, new_caches = self.forward(params, token, caches=state,
                                           cache_index=index,
-                                          block_tables=block_tables)
+                                          block_tables=tables)
         logits = quant_matmul(hidden, params["lm_head"], None)
         return logits, new_caches

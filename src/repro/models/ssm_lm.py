@@ -6,7 +6,8 @@ import jax.numpy as jnp
 
 from repro.core.layers import quant_matmul
 from repro.models.common import (dense_init, embed_init, gather_last,
-                                 rms_norm, remat_policy_of)
+                                 reject_paged_spec, remat_policy_of,
+                                 rms_norm)
 from repro.models.ssm import (SSMCache, init_mamba2, mamba2_block,
                               snapshot_row, ssm_cache_shape)
 from repro.models.transformer import chunked_xent
@@ -69,13 +70,11 @@ class SSMLM:
                             unroll=not self.cfg.scan_layers)
         return xent, {"xent": xent}
 
-    def init_cache(self, batch: int, s_max: int, *, block_size=None,
-                   num_blocks=None):
-        """Recurrent state is O(1) per slot — paging buys nothing, so the
-        paged knobs are rejected and the cache stays dense (B, ...)."""
-        if block_size is not None or num_blocks is not None:
-            raise ValueError("ssm family keeps dense per-slot state; "
-                             "paged KV cache applies to attention slabs")
+    def init_cache(self, batch: int, s_max: int, *, spec=None):
+        """Recurrent state is O(1) per slot — paging buys nothing, so a
+        paged spec is rejected and the cache stays dense (B, ...)."""
+        reject_paged_spec(spec, "ssm", "recurrent state is O(1) per slot; "
+                          "paged KV pools apply to attention slabs")
         cfg = self.cfg
         dt = jnp.dtype(cfg.dtype)
         conv_s, state_s = ssm_cache_shape(cfg, batch)
@@ -111,12 +110,12 @@ class SSMLM:
         logits = quant_matmul(last, params["lm_head"], None)
         return logits, new_caches
 
-    def decode_step(self, params, token, caches, index, block_tables=None):
+    def decode_step(self, params, token, state, index, *, tables=None):
         """``index``: scalar or (B,) — unused by the position-free SSM
-        recurrence, accepted for a uniform engine-facing signature.
-        ``block_tables`` must be None (dense recurrent state)."""
-        assert block_tables is None, "ssm caches are dense (no block table)"
-        hidden, new_caches = self.forward(params, token, caches=caches,
+        recurrence, accepted for the uniform engine-facing signature.
+        ``tables`` must be None (dense recurrent state)."""
+        assert tables is None, "ssm caches are dense (no block table)"
+        hidden, new_caches = self.forward(params, token, caches=state,
                                           cache_index=index)
         logits = quant_matmul(hidden, params["lm_head"], None)
         return logits, new_caches

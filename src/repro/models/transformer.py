@@ -21,8 +21,9 @@ from repro.core.layers import quant_matmul
 from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod
 from repro.models.attention import KVCache, init_gqa, init_mla
-from repro.models.common import (dense_init, embed_init, gather_last,
-                                 rms_norm, remat_policy_of, token_positions)
+from repro.models.common import (CacheSpec, dense_init, embed_init,
+                                 gather_last, remat_policy_of, rms_norm,
+                                 token_positions)
 from repro.models.mlp import init_mlp, mlp
 
 
@@ -190,10 +191,10 @@ class TransformerLM:
         return xent + aux, {"xent": xent, "aux": aux}
 
     # ---------------- serving ----------------
-    def init_cache(self, batch: int, s_max: int, *, block_size: int | None
-                   = None, num_blocks: int | None = None) -> tuple:
-        """Dense slab caches (B, s_max, ...) by default.  With
-        ``block_size``/``num_blocks``, every KV leaf becomes a paged pool
+    def init_cache(self, batch: int, s_max: int, *,
+                   spec: CacheSpec | None = None) -> tuple:
+        """Dense slab caches (B, s_max, ...) by default.  With a paged
+        ``spec``, every KV leaf becomes a paged pool
         (num_blocks, block_size, ...) shared by all slots and indexed via a
         per-row block table (``batch``/``s_max`` then only size the layout,
         not the leaves)."""
@@ -202,9 +203,8 @@ class TransformerLM:
         moe = cfg.moe
         n_dense = moe.first_dense if moe else 0
         n_scan = cfg.num_layers - n_dense
-        if block_size is not None:
-            assert num_blocks is not None, "paged cache needs num_blocks"
-            lead = (num_blocks, block_size)
+        if spec is not None and spec.paged:
+            lead = (spec.num_blocks, spec.block_size)
         else:
             lead = (batch, s_max)
 
@@ -239,14 +239,14 @@ class TransformerLM:
         logits = self.logits(params, last)
         return logits, new_caches
 
-    def decode_step(self, params, token, caches, index, block_tables=None):
+    def decode_step(self, params, token, state, index, *, tables=None):
         """token: (B, 1) int32; index: scalar int32 position shared by all
         rows, or a (B,) int32 array of per-row positions (mixed-depth
-        continuous batching).  ``block_tables``: (B, nblk) int32 when
-        ``caches`` are paged pools (see ``init_cache``)."""
+        continuous batching).  ``tables``: (B, nblk) int32 block tables
+        when ``state`` holds paged pools (see ``init_cache``)."""
         hidden, _, new_caches = self.forward(
-            params, token, caches=caches, cache_index=index,
-            block_tables=block_tables)
+            params, token, caches=state, cache_index=index,
+            block_tables=tables)
         return self.logits(params, hidden), new_caches
 
 
@@ -264,10 +264,10 @@ def chunked_xent(hidden, head, labels, mask=None, chunk: int = 256,
     nc = s // chunk
     assert s % chunk == 0, (s, chunk)
 
-    def piece(h, l, m):
+    def piece(h, lab, m):
         logits = (h @ head).astype(jnp.float32)
         logz = jax.nn.logsumexp(logits, axis=-1)
-        gold = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
         return ((logz - gold) * m).sum(), m.sum()
 
     if mask is None:

@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.models.common import reject_paged_spec
 from repro.models.transformer import TransformerLM
 
 
@@ -43,7 +44,11 @@ class VLM:
         xent = chunked_xent(hidden, head, batch["labels"], mask)
         return xent + aux, {"xent": xent}
 
-    def init_cache(self, batch: int, s_max: int):
+    def init_cache(self, batch: int, s_max: int, *, spec=None):
+        """Uniform contract: the text-only engine does not page modality
+        backbones yet, so a paged spec is rejected explicitly."""
+        reject_paged_spec(spec, "vlm", "the multimodal backbone is served "
+                          "dense (no engine-managed block tables)")
         return self.backbone.init_cache(batch, s_max)
 
     def prefill(self, params, tokens, caches, *, patches, last_pos=None):
@@ -56,6 +61,9 @@ class VLM:
         logits = self.backbone.logits(params, last)
         return logits, new_caches
 
-    def decode_step(self, params, token, caches, index):
-        """``index``: scalar or (B,) per-row positions."""
-        return self.backbone.decode_step(params, token, caches, index)
+    def decode_step(self, params, token, state, index, *, tables=None):
+        """``index``: scalar or (B,) per-row positions.  ``tables`` must be
+        None (dense backbone cache) — accepted for the uniform engine
+        contract."""
+        return self.backbone.decode_step(params, token, state, index,
+                                         tables=tables)

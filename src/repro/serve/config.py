@@ -1,0 +1,185 @@
+"""EngineConfig: every serving knob in one validated dataclass.
+
+Four PRs of engine growth piled ten interdependent kwargs onto
+``Engine.__init__`` and scattered their cross-field and family validation
+through the constructor.  This module is the single source of truth for
+both: the knobs live in one frozen dataclass, the field-level checks run in
+``__post_init__``, and the family-dependent rules (which families are
+servable, which can page, which need paging for the prefix cache) run in
+:meth:`EngineConfig.validate` against the substrate capability sets
+declared by ``repro.serve.backend``.
+
+CLI integration is single-sourced too: :meth:`EngineConfig.add_cli_args`
+registers the argparse flags and :meth:`EngineConfig.from_args` builds the
+config back out of the parsed namespace — both launch CLIs
+(``repro.launch.serve`` and ``examples/serve_luna.py``) share them, so a
+new knob is added in exactly one place.
+
+Legacy ``Engine(cfg, params, max_batch=..., paged=..., ...)`` kwargs keep
+working for one release through a deprecation shim in the engine
+constructor (:func:`config_from_legacy_kwargs` builds the equivalent
+config and the engine warns ``DeprecationWarning`` once per construction).
+"""
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass, fields, replace
+
+from repro.serve.sampling import SamplingConfig
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """All engine knobs; see the README "Serving engine" section.
+
+    * ``max_batch`` / ``max_seq`` — slot count and per-slot token budget.
+    * ``prefill_bucket`` — prompt lengths are padded up to multiples of
+      this and prefilled one jit call per bucket.
+    * ``paged`` / ``block_size`` / ``num_blocks`` — paged-block KV cache
+      (attention families): per-request block reservation instead of full
+      ``max_seq`` rows; ``num_blocks=None`` sizes the pool at
+      dense-equivalent capacity plus the reserved garbage block.
+    * ``prefill_chunk`` — admit prompts longer than this in N-token chunks
+      interleaved with decode ticks.
+    * ``prefix_cache`` / ``prefix_cache_nodes`` — radix-tree prompt-prefix
+      reuse (attention families require ``paged=True``).
+    * ``sampling`` / ``seed`` — token sampling mode and the engine PRNG
+      seed (``sampling=None`` means greedy).
+    * ``starvation_bound`` — scheduler aging threshold: a queued request
+      passed over this many times gains one priority bucket (see
+      ``repro.serve.engine.Scheduler``).
+    """
+    max_batch: int = 8
+    max_seq: int = 256
+    prefill_bucket: int = 16
+    paged: bool = False
+    block_size: int = 16
+    num_blocks: int | None = None
+    prefill_chunk: int | None = None
+    prefix_cache: bool = False
+    prefix_cache_nodes: int = 256
+    sampling: SamplingConfig | None = None
+    seed: int = 0
+    starvation_bound: int = 8
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.max_seq < 2:
+            raise ValueError(f"max_seq must be >= 2 (one prompt token + one "
+                             f"generated), got {self.max_seq}")
+        if self.prefill_bucket < 1:
+            raise ValueError(f"prefill_bucket must be >= 1, "
+                             f"got {self.prefill_bucket}")
+        if self.prefill_chunk is not None and self.prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, "
+                             f"got {self.prefill_chunk}")
+        if self.paged and self.block_size < 1:
+            raise ValueError(f"block_size must be >= 1, "
+                             f"got {self.block_size}")
+        if self.prefix_cache and self.prefix_cache_nodes < 1:
+            raise ValueError(f"prefix_cache_nodes must be >= 1, "
+                             f"got {self.prefix_cache_nodes}")
+        if self.starvation_bound < 1:
+            raise ValueError(f"starvation_bound must be >= 1, "
+                             f"got {self.starvation_bound}")
+
+    # --- family cross-validation ----------------------------------------
+    def validate(self, family: str) -> None:
+        """Every family-dependent rule, in one place (previously scattered
+        through ``Engine.__init__``)."""
+        from repro.serve.backend import PAGED_FAMILIES, SERVED_FAMILIES
+        if family in ("encdec", "vlm"):
+            raise ValueError(
+                f"family {family!r} needs modality inputs the text-only "
+                "engine does not carry")
+        if family not in SERVED_FAMILIES:
+            raise ValueError(
+                f"family {family!r} is not servable by this engine "
+                f"(supported: {SERVED_FAMILIES})")
+        if self.paged and family not in PAGED_FAMILIES:
+            raise ValueError(
+                f"paged=True is not supported for family {family!r}: "
+                "its cache is O(1) recurrent state per slot with no KV "
+                f"leaves to page (paged families: {PAGED_FAMILIES})")
+        if self.prefix_cache and family in PAGED_FAMILIES and not self.paged:
+            raise ValueError(
+                f"prefix_cache for family {family!r} shares its "
+                "attention KV as copy-on-write paged blocks — construct "
+                "with paged=True (the ssm family caches dense state "
+                "snapshots and needs no paging)")
+
+    # --- CLI binding ----------------------------------------------------
+    @staticmethod
+    def add_cli_args(ap) -> None:
+        """Register the shared engine flags on an argparse parser."""
+        ap.add_argument("--max-batch", type=int, default=None,
+                        help="concurrent sequence slots")
+        ap.add_argument("--max-seq", type=int, default=None,
+                        help="per-slot token budget (prompt + generation)")
+        ap.add_argument("--prefill-bucket", type=int, default=None,
+                        help="prompt lengths are padded up to multiples of "
+                             "this and prefilled one jit call per bucket")
+        ap.add_argument("--paged", action="store_true",
+                        help="paged-block KV cache: per-request block "
+                             "reservation instead of full max-seq rows "
+                             "(attention families)")
+        ap.add_argument("--block-size", type=int, default=None,
+                        help="tokens per KV block in --paged mode")
+        ap.add_argument("--num-blocks", type=int, default=None,
+                        help="pool size in blocks (default: dense-equivalent "
+                             "capacity + the reserved garbage block)")
+        ap.add_argument("--prefill-chunk", type=int, default=None,
+                        help="admit prompts longer than this in N-token "
+                             "chunks interleaved with decode ticks")
+        ap.add_argument("--prefix-cache", action="store_true",
+                        help="radix-tree prompt-prefix sharing: warm "
+                             "admissions reuse cached KV blocks (attention, "
+                             "needs --paged) or recurrent state snapshots "
+                             "(ssm) and prefill only the uncached tail")
+        ap.add_argument("--prefix-cache-nodes", type=int, default=None,
+                        help="LRU budget for cached prefix boundaries")
+        ap.add_argument("--sampling", default="greedy",
+                        choices=["greedy", "temperature", "top_k"])
+        ap.add_argument("--temperature", type=float, default=1.0)
+        ap.add_argument("--top-k", type=int, default=40)
+        ap.add_argument("--seed", type=int, default=0)
+
+    @classmethod
+    def from_args(cls, args, **overrides) -> "EngineConfig":
+        """Build a config from an argparse namespace produced by
+        :meth:`add_cli_args`.  ``overrides`` win over CLI values (a CLI may
+        pin e.g. ``max_batch`` instead of exposing the flag); flags the
+        parser left at None fall back to the dataclass defaults."""
+        cfg = cls()
+        vals = {}
+        for f in fields(cls):
+            if f.name == "sampling":
+                continue
+            v = getattr(args, f.name, None)
+            if v is not None and v is not False:
+                vals[f.name] = v
+        mode = getattr(args, "sampling", "greedy")
+        vals["sampling"] = SamplingConfig(
+            mode=mode, temperature=getattr(args, "temperature", 1.0),
+            top_k=getattr(args, "top_k", 0) if mode == "top_k" else 0)
+        vals.update(overrides)
+        return replace(cfg, **vals)
+
+
+#: legacy Engine(**kwargs) names accepted by the deprecation shim
+LEGACY_ENGINE_KWARGS = tuple(f.name for f in fields(EngineConfig))
+
+
+def config_from_legacy_kwargs(kwargs: dict) -> EngineConfig:
+    """Deprecation shim for pre-v2 ``Engine(cfg, params, **knobs)`` calls:
+    map the old constructor kwargs onto an :class:`EngineConfig` and warn.
+    Removed one release after the v2 API lands."""
+    bad = set(kwargs) - set(LEGACY_ENGINE_KWARGS)
+    if bad:
+        raise TypeError(f"unknown Engine kwargs: {sorted(bad)}")
+    warnings.warn(
+        "Engine(cfg, params, **knobs) is deprecated; pass "
+        "Engine(cfg, params, EngineConfig(...)) instead "
+        "(see the README migration table)", DeprecationWarning, stacklevel=3)
+    return EngineConfig(**kwargs)

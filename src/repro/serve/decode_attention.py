@@ -100,9 +100,9 @@ def _combine(m_loc, l_loc, o_loc, dtype):
     """One tiny cross-rank combine of the online-softmax partials."""
     m = jax.lax.pmax(m_loc, "model")
     corr = jnp.exp(m_loc - m)
-    l = jax.lax.psum(l_loc * corr, "model")
+    denom = jax.lax.psum(l_loc * corr, "model")
     o = jax.lax.psum(o_loc * corr, "model")
-    return (o / jnp.maximum(l, 1e-30)).astype(dtype)[:, None]
+    return (o / jnp.maximum(denom, 1e-30)).astype(dtype)[:, None]
 
 
 def _gqa_partials(q, k_c, v_c, ok, *, g, sm_scale, grouped_bf16):

@@ -9,51 +9,46 @@ tick advances all active slots one token **at their own position** — a
 own prefix (static shapes: jit caches one decode program plus one prefill
 program per bucket shape).
 
-Two cache substrates, token-identical by construction (the dense slab stays
-as the reference oracle):
+**Serving API v2.**  All knobs live in one validated
+:class:`repro.serve.config.EngineConfig` (``Engine(cfg, params,
+EngineConfig(...))``; legacy ``Engine(cfg, params, **knobs)`` still works
+for one release behind a ``DeprecationWarning``).  ``submit()`` returns a
+:class:`RequestHandle` — incremental token streaming (generator and
+on-token callback), ``cancel()`` that releases blocks and staged state
+mid-admission, and truthiness preserving the legacy admitted-now contract.
+Queued admission order is no longer FIFO: a :class:`Scheduler` orders by
+priority class with deadline-aware tie-breaks and a one-bucket aging rule
+(starvation bound), and owns the head-of-line stall state so paged
+backpressure survives across ``serve()`` calls.
 
-* **dense** (default) — per-slot (max_batch, max_seq, ...) cache rows; a
-  slot reserves a full ``max_seq`` row for its whole lifetime.
-* **paged** (``paged=True``) — the KV leaves become pools of
-  ``num_blocks`` fixed ``block_size``-token blocks with a per-slot block
-  table: admission reserves only ``ceil(min(len(prompt) + max_new,
-  max_seq) / block_size)`` blocks (so decode can never run out
-  mid-request), freeing a slot just returns its blocks to the pool, and a
-  short request no longer pays a long request's reservation.  When the pool
-  is short, admission backpressures (FIFO head-of-line) until blocks free.
+The cache substrate is fully owned by :mod:`repro.serve.backend`: the
+engine holds ONE :class:`~repro.serve.backend.CacheBackend` and never
+branches on family or substrate — dense slabs, paged block pools, dense
+recurrent state, and the hybrid's split substrate are all the same code
+path here.  Substrate semantics, in backend terms:
+
+* **dense** — per-slot (max_batch, max_seq, ...) cache rows; a slot
+  reserves a full ``max_seq`` row for its whole lifetime.
+* **paged** (``EngineConfig(paged=True)``) — admission reserves only
+  ``ceil(min(len(prompt) + max_new, max_seq) / block_size)`` blocks (so
+  decode can never run out mid-request), freeing a slot just returns its
+  blocks to the pool.  When the pool is short, admission backpressures
+  until blocks free.
+* **split substrate** (hybrid, ``paged=True``) — attention KV leaves in
+  the block pool, O(1) SSM state dense, routed structurally per leaf.
 
 **Chunked prefill** (``prefill_chunk=N``): prompts longer than N tokens are
 admitted in N-token pieces interleaved with decode ticks — each tick runs
-at most ONE chunk of prefill work before the decode step, so a
-``max_seq``-long admission never stalls active decodes for more than one
-chunk's worth of compute.  All served families: attention chunks continue
-the staged KV cache at the write offset; the recurrent families resume the
-mamba2 SSD scan from the carried (conv, state) — the scan accepts an
-initial state and a pad-validity mask, so chunked and length-bucketed
-prefill are both token-identical to whole-prompt prefill.
-
-**Split substrate** (hybrid family, ``paged=True``): the shared attention
-block's KV leaves live in the paged block pool (one block table per slot,
-reused by every layer group) while the O(1)-per-slot SSM state stays dense
-— each cache leaf gets the substrate that actually pays off.  The engine
-routes scatters per leaf: block-table writes for pool leaves, slot-row
-writes for dense leaves.
+at most ONE chunk of prefill work before the decode step.  Attention
+chunks continue the staged KV cache at the write offset; the recurrent
+families resume the mamba2 SSD scan from the carried (conv, state), so
+chunked and length-bucketed prefill are both token-identical to
+whole-prompt prefill.
 
 **Prefix cache** (``prefix_cache=True``): a radix tree over prompt tokens
 (``repro.serve.prefix_cache``) remembers what prefill already computed.
 Admission matches the longest cached prefix and re-prefills only the
-uncached tail — LUNA's capacity-for-computation bet applied to serving:
-
-* attention families (``paged=True`` required): cached prefixes own
-  refcounted pool blocks, shared COPY-ON-WRITE into the new request's
-  block table (the tail lands in private blocks; the staged scatter's
-  shared range is redirected to the garbage block, so a shared block is
-  never written in place);
-* recurrent families: cached prefixes store the fixed-size dense
-  (conv_state, ssd_state) snapshot at the boundary, and the
-  state-continuing SSD scan resumes from it; the hybrid combines both
-  (paged attention blocks + state snapshot at block-aligned boundaries).
-
+uncached tail — LUNA's capacity-for-computation bet applied to serving.
 Warm admissions ride the same staged machinery as chunked prefill — whose
 token-identity to whole-prompt prefill is already pinned — so warm output
 is token-identical to cold for every family and both scheduler paths.
@@ -67,6 +62,7 @@ projection goes through the LUNA integer path.
 """
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass, field, fields, replace
 
@@ -75,19 +71,230 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.registry import get_model
-from repro.serve.paged import (GARBAGE_BLOCK, BlockAllocator, blocks_needed,
-                               ceil_div)
+from repro.serve.backend import make_backend
+from repro.serve.config import EngineConfig, config_from_legacy_kwargs
+from repro.serve.paged import ceil_div
 from repro.serve.prefix_cache import PrefixCache
 from repro.serve.sampling import SamplingConfig, sample
 
 
-@dataclass
+@dataclass(eq=False)
 class Request:
+    """One generation request.
+
+    ``priority``: scheduler class — higher admits first (e.g. 0 = batch,
+    1 = interactive).  ``deadline``: wall-clock stamp used as the
+    within-class tie-break (earlier = sooner; None = no deadline).
+    ``submit_ts``/``token_ts`` are stamped by the engine — TTFT is
+    ``token_ts[0] - submit_ts``, ITL the consecutive ``token_ts`` gaps.
+    ``eq=False``: a request is an identity (the engine keys streaming
+    callbacks on the object itself, so rid reuse can never cross streams).
+    """
     rid: int
     prompt: list[int]
     max_new: int = 16
+    priority: int = 0
+    deadline: float | None = None
     out: list[int] = field(default_factory=list)
     done: bool = False
+    cancelled: bool = False
+    submit_ts: float | None = field(default=None, repr=False)
+    token_ts: list[float] = field(default_factory=list, repr=False)
+
+
+class RequestHandle:
+    """Live view of one submitted request.
+
+    * truthiness — ``bool(handle)`` is the legacy ``submit()`` contract:
+      True iff the request was admitted immediately (False = backpressure;
+      the request is NOT queued — retry, or hand it to ``serve()``).
+    * streaming — :meth:`tokens` yields tokens incrementally, driving the
+      engine between yields; an ``on_token`` callback registered at
+      ``submit()`` fires synchronously per emitted token.  The streamed
+      sequence is exactly ``req.out`` (pinned in tests).
+    * :meth:`cancel` — releases the request's slot, blocks and staged
+      state wherever it currently is in the lifecycle.
+    """
+
+    def __init__(self, engine: "Engine", req: Request, on_token=None):
+        self._engine = engine
+        self.req = req
+        self._on_token = on_token
+        self._admitted = False
+
+    def __bool__(self) -> bool:
+        return self._admitted
+
+    @property
+    def rid(self) -> int:
+        return self.req.rid
+
+    @property
+    def out(self) -> list[int]:
+        return self.req.out
+
+    @property
+    def done(self) -> bool:
+        return self.req.done
+
+    @property
+    def cancelled(self) -> bool:
+        return self.req.cancelled
+
+    def cancel(self) -> bool:
+        """Stop the request and release its resources; True unless it had
+        already finished.  Covers every lifecycle stage — queued, staged
+        mid-chunked-prefill, actively decoding, or never admitted (the
+        engine then just closes the request out)."""
+        return self._engine.cancel(self.req)
+
+    def tokens(self):
+        """Generator of this request's tokens, in emission order, ending
+        when the request completes (or is cancelled).  Drives the engine
+        one tick at a time while waiting; an un-admitted handle re-attempts
+        admission between ticks."""
+        i = 0
+        while True:
+            while i < len(self.req.out):
+                yield self.req.out[i]
+                i += 1
+            if self.req.done:
+                return
+            if not self._admitted:
+                self._admitted = self._engine._admit_handle(self)
+                if not self._admitted and self._engine.idle:
+                    raise RuntimeError(
+                        f"request {self.req.rid} cannot be admitted on an "
+                        "idle engine (capacity permanently short?)")
+            if not self.req.done:
+                self._engine.step()
+
+
+@dataclass(eq=False)
+class _QueueEntry:
+    """Scheduler bookkeeping for one queued request.  ``passed`` counts
+    admissions that went to OTHER requests while this one waited."""
+    req: Request
+    arrival: int
+    passed: int = 0
+
+
+class Scheduler:
+    """Priority-class admission queue with deadline tie-breaks, one-bucket
+    aging, and the persistent head-of-line stall state.
+
+    Ordering: highest *effective* priority class first; within a class,
+    aged entries first (by arrival), then earliest deadline, then arrival.
+    Effective priority = ``req.priority``, plus ONE bucket once the entry
+    has been passed over ``starvation_bound`` times.
+
+    Documented bounds (pinned by the scheduler property tests):
+
+    * **priority inversion <= one bucket** — at every admission, any
+      still-queued request's ``priority`` exceeds the admitted request's
+      ``priority`` by at most 1 (aging adds at most one bucket, and the
+      scheduler always picks a maximal effective class).
+    * **starvation bound** — under priorities spanning two adjacent
+      classes, a queued request is passed over at most ``starvation_bound``
+      times by higher-priority work plus once per earlier-arrived request
+      (aged entries outrank every unaged and every later-arrived aged
+      entry of their class, so new arrivals can never leapfrog them).
+
+    The stall state (per-rid ``free_capacity`` at the last failed
+    reservation) lives HERE, not in ``serve()``'s locals, so paged
+    backpressure survives across ``serve()`` calls and ``submit()`` uses
+    the same logic — a backpressured request retries only after capacity
+    actually grew, instead of re-walking the radix tree (and churning
+    shared-block refcounts) on every attempt; stalls are tracked per rid
+    so concurrently backpressured pollers cannot thrash each other's
+    record.
+    """
+
+    def __init__(self, starvation_bound: int = 8):
+        self.starvation_bound = starvation_bound
+        self._queue: list[_QueueEntry] = []
+        self._arrivals = 0
+        self._stalls: dict[int, int] = {}
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def push(self, req: Request) -> None:
+        self._queue.append(_QueueEntry(req, self._arrivals))
+        self._arrivals += 1
+
+    def aged(self, e: _QueueEntry) -> bool:
+        return e.passed >= self.starvation_bound
+
+    def effective_priority(self, e: _QueueEntry) -> int:
+        """Base priority, plus at most ONE aging bucket (this cap is what
+        bounds priority inversion to one bucket)."""
+        return e.req.priority + (1 if self.aged(e) else 0)
+
+    def _key(self, e: _QueueEntry):
+        if self.aged(e):
+            return (-self.effective_priority(e), 0, float(e.arrival),
+                    e.arrival)
+        dl = e.req.deadline if e.req.deadline is not None else math.inf
+        return (-self.effective_priority(e), 1, dl, e.arrival)
+
+    def select(self) -> _QueueEntry | None:
+        """The entry the next admission should take (queue unchanged)."""
+        if not self._queue:
+            return None
+        return min(self._queue, key=self._key)
+
+    def commit(self, entry: _QueueEntry) -> None:
+        """``entry`` was admitted: remove it and age everyone it passed."""
+        self._queue.remove(entry)
+        self.age_all()
+
+    def age_all(self) -> None:
+        """An admission went to someone not in the queue (or just removed
+        from it): every waiting entry was passed over once.  Direct
+        ``submit()`` admissions call this too, so the starvation bound
+        holds engine-wide, not just for queue-internal admissions."""
+        for e in self._queue:
+            e.passed += 1
+
+    def remove(self, req: Request) -> bool:
+        """Drop a queued request BY OBJECT IDENTITY (cancellation before
+        admission, or a direct admission claiming its own stale entry) —
+        rid matching could tear down an unrelated request reusing the
+        number."""
+        for e in self._queue:
+            if e.req is req:
+                self._queue.remove(e)
+                return True
+        return False
+
+    def drop(self, entry: _QueueEntry) -> None:
+        """Evict one entry without aging anyone (no admission happened)."""
+        self._queue.remove(entry)
+
+    # --- head-of-line stall bookkeeping ---------------------------------
+    _MAX_STALLS = 128          # bound on abandoned-rid stall records
+
+    def stalled(self, rid: int, capacity: int, need: int) -> bool:
+        """True while ``rid``'s last reservation failure still stands: the
+        retry wants at least as much capacity as the failed attempt and
+        capacity has not grown past what it failed at.  A smaller request
+        reusing the rid is NOT gated — the record is per failed demand,
+        not per name."""
+        rec = self._stalls.get(rid)
+        return rec is not None and need >= rec[1] and capacity <= rec[0]
+
+    def note_stall(self, rid: int, capacity: int, need: int) -> None:
+        self._stalls[rid] = (capacity, need)
+        while len(self._stalls) > self._MAX_STALLS:
+            self._stalls.pop(next(iter(self._stalls)))
+
+    def clear_stall(self, rid: int | None = None) -> None:
+        if rid is None:
+            self._stalls.clear()
+        else:
+            self._stalls.pop(rid, None)
 
 
 @dataclass(eq=False)
@@ -120,6 +327,7 @@ class EngineMetrics:
     prefix_hits: int = 0         # admissions seeded from the prefix cache
     prefix_tokens_reused: int = 0   # prompt tokens NOT re-prefilled
     cache_evictions: int = 0     # prefix-cache nodes evicted (LRU)
+    cancelled: int = 0           # requests cancelled mid-lifecycle
 
     def since(self, start: "EngineMetrics") -> "EngineMetrics":
         """Per-call delta: these counters minus a ``start`` snapshot (the
@@ -144,162 +352,75 @@ class EngineMetrics:
             "prefix_hits": self.prefix_hits,
             "prefix_tokens_reused": self.prefix_tokens_reused,
             "cache_evictions": self.cache_evictions,
+            "cancelled": self.cancelled,
         }
         return d
 
 
-# every served family tolerates right-padded prefill rows: attention masks
-# pad columns causally, and the recurrent families (ssm/hybrid) mask them
-# out of the carried state (masked SSD scan + per-row conv-state gather)
-PADDED_PREFILL_FAMILIES = ("dense", "moe", "ssm", "hybrid")
-
-# families with attention KV leaves the paged block pool can back; "ssm"
-# is excluded on purpose — its whole cache is O(1) recurrent state per
-# slot, there is nothing to page
-PAGED_FAMILIES = ("dense", "moe", "hybrid")
-
-
 class Engine:
-    def __init__(self, cfg, params, *, max_batch: int = 8,
-                 max_seq: int = 256, sampling: SamplingConfig | None = None,
-                 seed: int = 0, prefill_bucket: int = 16,
-                 paged: bool = False, block_size: int = 16,
-                 num_blocks: int | None = None,
-                 prefill_chunk: int | None = None,
-                 prefix_cache: bool = False,
-                 prefix_cache_nodes: int = 256):
-        if cfg.family in ("encdec", "vlm"):
-            raise ValueError(
-                f"family {cfg.family!r} needs modality inputs the text-only "
-                "engine does not carry")
-        if prefill_bucket < 1:
-            raise ValueError(f"prefill_bucket must be >= 1, "
-                             f"got {prefill_bucket}")
+    def __init__(self, cfg, params, config: EngineConfig | None = None,
+                 **legacy):
+        if legacy:
+            if config is not None:
+                raise TypeError(
+                    "pass EngineConfig OR legacy kwargs, not both")
+            config = config_from_legacy_kwargs(legacy)
+        elif config is None:
+            config = EngineConfig()
+        config.validate(cfg.family)
         self.cfg = cfg
         self.model = get_model(cfg)
         self.params = params
-        self.max_batch = max_batch
-        self.max_seq = max_seq
-        self.sampling = sampling or SamplingConfig()
-        self.prefill_bucket = prefill_bucket
-        if cfg.family not in PADDED_PREFILL_FAMILIES:
-            raise ValueError(
-                f"family {cfg.family!r} is not servable by this engine "
-                f"(supported: {PADDED_PREFILL_FAMILIES})")
-        if paged and cfg.family not in PAGED_FAMILIES:
-            raise ValueError(
-                f"paged=True is not supported for family {cfg.family!r}: "
-                "its cache is O(1) recurrent state per slot with no KV "
-                f"leaves to page (paged families: {PAGED_FAMILIES})")
-        if prefill_chunk is not None and prefill_chunk < 1:
-            raise ValueError(f"prefill_chunk must be >= 1, "
-                             f"got {prefill_chunk}")
-        if prefix_cache and cfg.family in ("dense", "moe", "hybrid") \
-                and not paged:
-            raise ValueError(
-                f"prefix_cache for family {cfg.family!r} shares its "
-                "attention KV as copy-on-write paged blocks — construct "
-                "with paged=True (the ssm family caches dense state "
-                "snapshots and needs no paging)")
-        self.paged = paged
-        self.prefill_chunk = prefill_chunk
-        if paged:
-            self.block_size = block_size
-            self.blocks_per_row = ceil_div(max_seq, block_size)
-            self.num_blocks = (num_blocks if num_blocks is not None
-                               else max_batch * self.blocks_per_row + 1)
-            self.allocator = BlockAllocator(self.num_blocks, block_size)
-            self.block_tables = np.full(
-                (max_batch, self.blocks_per_row), GARBAGE_BLOCK, np.int32)
-            self._slot_blocks: list[list[int]] = [[] for _ in
-                                                  range(max_batch)]
-            self.caches = self.model.init_cache(
-                max_batch, max_seq, block_size=block_size,
-                num_blocks=self.num_blocks)
-            # staged/fresh prefill rows cover whole blocks for the scatter
-            self._stage_len = self.blocks_per_row * block_size
-        else:
-            self.caches = self.model.init_cache(max_batch, max_seq)
-            self._stage_len = max_seq
-        self._batch_axes = self._find_batch_axes()
-        self._paged_leaves = self._find_paged_leaves()
-        self._needs_state = cfg.family in ("ssm", "hybrid")
+        self.config = config
+        self.max_batch = config.max_batch
+        self.max_seq = config.max_seq
+        self.sampling = config.sampling or SamplingConfig()
+        self.prefill_bucket = config.prefill_bucket
+        self.prefill_chunk = config.prefill_chunk
+        self.backend = make_backend(self.model, cfg.family, config)
+        self.caches = self.backend.caches
         self.prefix_cache = None
-        if prefix_cache:
+        if config.prefix_cache:
             self.prefix_cache = PrefixCache(
-                block_size=block_size if paged else None,
-                allocator=self.allocator if paged else None,
-                max_nodes=prefix_cache_nodes)
+                max_nodes=config.prefix_cache_nodes,
+                **self.backend.prefix_cache_kwargs())
             # recurrent snapshots are captured on this boundary grid;
-            # paged backends must land on whole blocks
-            self._capture_grid = block_size if paged else prefill_bucket
+            # paged payloads must land on whole blocks
+            self._capture_grid = self.backend.capture_grid(
+                config.prefill_bucket)
         self._evictions_seen = 0
-        self.positions = np.zeros(max_batch, np.int32)
-        self.key = jax.random.PRNGKey(seed)
+        self.positions = np.zeros(config.max_batch, np.int32)
+        self.key = jax.random.PRNGKey(config.seed)
         self.active: dict[int, Request] = {}
-        self.slots: list[Request | None] = [None] * max_batch
+        self.slots: list[Request | None] = [None] * config.max_batch
         self._chunked: list[_ChunkedPrefill] = []
+        self._admitting = False        # _admit in flight (emit window)
+        self._callbacks: dict[Request, list] = {}
+        self.scheduler = Scheduler(config.starvation_bound)
         self.metrics = EngineMetrics()
         self._prefill = jax.jit(self._prefill_impl)
         self._decode = jax.jit(self._decode_impl)
         self._chunk_step = jax.jit(self._chunk_step_impl)
         self._chunk_finish = jax.jit(self._chunk_finish_impl)
-        self._seed_gather = jax.jit(self._seed_gather_impl)
+        self._seed_gather = jax.jit(self.backend.gather_staging)
 
-    # --- cache-slab layout ----------------------------------------------
-    def _find_batch_axes(self):
-        """Per-leaf batch axis of the cache tree, found structurally by
-        diffing the shapes of two differently-sized DENSE cache trees
-        (cache layouts are family-specific: KV slabs are (B, S, ...),
-        scanned layers stack an (L,) axis in front).  Paged pools sit at
-        the same tree positions, with (num_blocks, block_size) replacing
-        (B, S) — the same axis indexes their block axis."""
-        a = self.model.init_cache(2, 4)
-        b = self.model.init_cache(3, 4)
+    # --- substrate views (compat surface; the logic lives in backend) ---
+    @property
+    def paged(self) -> bool:
+        return self.backend.paged
 
-        def one(la, lb):
-            diff = [ax for ax, (da, db) in enumerate(zip(la.shape, lb.shape))
-                    if da != db]
-            if len(diff) != 1:
-                raise ValueError(
-                    f"ambiguous batch axis for cache leaf {la.shape}")
-            return diff[0]
+    @property
+    def allocator(self):
+        return getattr(self.backend, "allocator", None)
 
-        return jax.tree.map(one, a, b)
+    @property
+    def block_tables(self):
+        return getattr(self.backend, "block_tables", None)
 
-    def _find_paged_leaves(self):
-        """Boolean tree marking which cache leaves are paged block pools —
-        found structurally by diffing a dense probe tree against a paged
-        probe tree at sizes whose leading dims cannot coincide.  Hybrid's
-        SPLIT SUBSTRATE falls out of this: its attention KV leaves differ
-        (pool-shaped) while its dense SSM state leaves match."""
-        if not self.paged:
-            return jax.tree.map(lambda a: False, self.caches)
-        dense = self.model.init_cache(2, 4)
-        pooled = self.model.init_cache(2, 4, block_size=2, num_blocks=7)
-        return jax.tree.map(lambda a, b: a.shape != b.shape, dense, pooled)
-
-    def _scatter(self, slab_tree, rows_tree, slots, tables):
-        """Write ``k`` freshly-prefilled cache rows into the slab — one
-        batched scatter per leaf, inside jit.  Dense leaves land whole rows
-        at ``slots``; paged-pool leaves are reshaped into
-        (k, nblk, block_size, ...) blocks and scattered to the physical ids
-        in ``tables`` (k, nblk).  Unreserved table entries all point at the
-        garbage block — their writes collide there harmlessly (never read
-        back)."""
-        def one(slab, rows, ax, is_pool):
-            if is_pool:
-                bs = self.block_size
-                shape = (rows.shape[:ax + 1] + (tables.shape[1], bs)
-                         + rows.shape[ax + 2:])
-                blocks = rows.reshape(shape).astype(slab.dtype)
-                idx = (slice(None),) * ax + (tables,)
-                return slab.at[idx].set(blocks)
-            idx = (slice(None),) * ax + (slots,)
-            return slab.at[idx].set(rows.astype(slab.dtype))
-
-        return jax.tree.map(one, slab_tree, rows_tree, self._batch_axes,
-                            self._paged_leaves)
+    @property
+    def idle(self) -> bool:
+        """Nothing queued, staged, or decoding."""
+        return not (self.active or self._chunked or self.scheduler.pending)
 
     # --- jit bodies -----------------------------------------------------
     def _prefill_impl(self, params, tokens, slab, last_pos, slots, tables,
@@ -308,10 +429,10 @@ class Engine:
         rows into the slab (dense leaves: at slot ids; pool leaves: at
         block tables), sample each row's first token from its own stream."""
         k = tokens.shape[0]
-        fresh = self.model.init_cache(k, self._stage_len)
+        fresh = self.backend.fresh(k)
         logits, rows = self.model.prefill(params, tokens, fresh,
                                           last_pos=last_pos)
-        new_slab = self._scatter(slab, rows, slots, tables)
+        new_slab = self.backend.scatter(slab, rows, slots, tables)
         toks = sample(logits[:, 0], key, self.sampling, rids=rids,
                       steps=jnp.zeros_like(rids))
         return toks, new_slab
@@ -319,7 +440,7 @@ class Engine:
     def _decode_impl(self, params, tokens, caches, positions, tables, rids,
                      steps, key):
         logits, new_caches = self.model.decode_step(
-            params, tokens, caches, positions, block_tables=tables)
+            params, tokens, caches, positions, tables=tables)
         toks = sample(logits[:, 0], key, self.sampling, rids=rids,
                       steps=steps)
         return toks, new_caches
@@ -340,7 +461,7 @@ class Engine:
         logits, staging = self.model.prefill(params, tokens, staging,
                                              last_pos=last_pos,
                                              cache_index=offset)
-        new_slab = self._scatter(slab, staging, slots, tables)
+        new_slab = self.backend.scatter(slab, staging, slots, tables)
         tok = sample(logits[:, 0], key, self.sampling, rids=rid,
                      steps=jnp.zeros_like(rid))
         return tok, new_slab, staging
@@ -355,46 +476,23 @@ class Engine:
             raise ValueError(
                 f"request {req.rid}: prompt length {len(req.prompt)} not in "
                 f"[1, max_seq-1={self.max_seq - 1}]")
-        if self.paged:
-            need = blocks_needed(len(req.prompt), req.max_new, self.max_seq,
-                                 self.block_size)
-            if need > self.num_blocks - 1:
-                raise ValueError(
-                    f"request {req.rid} needs {need} blocks but the pool "
-                    f"holds {self.num_blocks - 1}")
+        self.backend.validate_request(req.rid, len(req.prompt), req.max_new)
 
-    def _reserve(self, req: Request, slot: int,
-                 hit=None) -> bool:
-        """Paged: claim the request's lifetime block budget up front, so a
-        decode tick can never run out of blocks mid-request.  A prefix-hit
-        admission refs the matched node's blocks (copy-on-write share) and
-        allocates only the tail privately; when the pool runs short, LRU
-        unreferenced cache nodes are evicted before backpressuring.  False =
-        backpressure (pool short); dense mode always succeeds."""
-        if not self.paged:
-            return True
-        shared = list(hit.blocks) if hit is not None else []
-        need = blocks_needed(len(req.prompt), req.max_new, self.max_seq,
-                             self.block_size) - len(shared)
-        assert need >= 0, (need, len(shared))
-        # take the request's ref BEFORE any eviction: the extra owner makes
-        # the matched node's blocks non-evictable, so evict_for can neither
-        # free them nor recycle them as this admission's private tail
-        if shared:
-            self.allocator.ref(shared)
-        if need > self.allocator.free_blocks and self.prefix_cache:
+    def _reserve(self, req: Request, slot: int, hit=None) -> bool:
+        """Claim the request's lifetime substrate capacity up front (paged:
+        its block budget; a prefix hit's shared blocks are ref'd
+        copy-on-write and only the tail is allocated privately).  False =
+        backpressure; dense substrates always succeed."""
+        shared = list(hit.blocks) if hit is not None else None
+        return self.backend.reserve(slot, len(req.prompt), req.max_new,
+                                    shared, on_short=self._on_pool_short)
+
+    def _on_pool_short(self, need: int):
+        """Pool pressure hook: let the prefix cache evict LRU unreferenced
+        nodes before the reservation backpressures."""
+        if self.prefix_cache is not None:
             self.prefix_cache.evict_for(need)
             self._note_evictions()
-        fresh = self.allocator.alloc(need)
-        if fresh is None:
-            if shared:
-                self.allocator.release(shared)
-            return False
-        blocks = shared + fresh
-        self._slot_blocks[slot] = blocks
-        self.block_tables[slot, :] = GARBAGE_BLOCK
-        self.block_tables[slot, :len(blocks)] = blocks
-        return True
 
     def _note_evictions(self):
         """Fold the prefix cache's lifetime eviction count into the
@@ -404,20 +502,28 @@ class Engine:
             self._evictions_seen = self.prefix_cache.evictions
             self.metrics.cache_evictions += d
 
-    def _release_slot_resources(self, slot: int):
-        if self.paged and self._slot_blocks[slot]:
-            self.allocator.release(self._slot_blocks[slot])
-            self._slot_blocks[slot] = []
-            self.block_tables[slot, :] = GARBAGE_BLOCK
-
     def _free_slot(self, slot: int):
         self.slots[slot] = None
         self.positions[slot] = 0
-        self._release_slot_resources(slot)
+        self.backend.free_slot(slot)
 
     def _chunkable(self, prompt_len: int) -> bool:
         return (self.prefill_chunk is not None
                 and prompt_len > self.prefill_chunk)
+
+    # --- token emission / retirement ------------------------------------
+    def _emit(self, req: Request, tok: int):
+        """Append one generated token: the single emission point — output
+        list, latency stamp, and streaming callbacks all fan out from
+        here."""
+        req.out.append(tok)
+        req.token_ts.append(time.perf_counter())
+        for cb in tuple(self._callbacks.get(req, ())):
+            cb(tok)
+
+    def _retire(self, req: Request):
+        req.done = True
+        self._callbacks.pop(req, None)
 
     # --- prefix cache ---------------------------------------------------
     def _match_prefix(self, req: Request):
@@ -428,7 +534,7 @@ class Engine:
             return None
         return self.prefix_cache.match(req.prompt,
                                        max_len=len(req.prompt) - 1,
-                                       need_state=self._needs_state)
+                                       need_state=self.backend.needs_state)
 
     def _capture_boundary(self, prompt_len: int) -> int:
         """Grid boundary to snapshot recurrent state at (0 = none)."""
@@ -446,27 +552,11 @@ class Engine:
         chunked admissions)."""
         if hit is not None or self._chunkable(len(req.prompt)):
             return True
-        if not lone or self.prefix_cache is None or not self._needs_state:
+        if not lone or self.prefix_cache is None \
+                or not self.backend.needs_state:
             return False
         cap = self._capture_boundary(len(req.prompt))
         return 0 < cap < len(req.prompt)
-
-    def _seed_gather_impl(self, caches, tbl):
-        """Jit body: fresh 1-row staging tree with every pool leaf's shared
-        blocks gathered into its dense staging leaf (logical order, exactly
-        the values the cold prefill wrote).  Gathers run along each leaf's
-        structural block axis (scan-stacked leaves carry a leading layer
-        axis), mirroring ``_scatter``."""
-        staging = self.model.init_cache(1, self._stage_len)
-
-        def one(stg, pool, ax, is_pool):
-            if not is_pool:
-                return stg
-            g = jnp.take(pool, tbl, axis=ax)      # (..., 1, nblk, bs, ...)
-            return g.reshape(stg.shape)
-
-        return jax.tree.map(one, staging, caches, self._batch_axes,
-                            self._paged_leaves)
 
     def _seed_staging(self, hit):
         """Build the warm admission's staging row: gather the shared
@@ -474,48 +564,33 @@ class Engine:
         once) and swap in the recurrent state snapshot.  The tail prefill
         then continues at ``hit.length`` as if the first chunks had just
         run."""
-        if self.paged and hit.blocks:
-            table = np.full((1, self.blocks_per_row), GARBAGE_BLOCK,
-                            np.int32)
-            table[0, :len(hit.blocks)] = hit.blocks
-            staging = self._seed_gather(self.caches, jnp.asarray(table))
+        if hit.blocks:
+            tbl = jnp.asarray(self.backend.staging_table(hit.blocks))
+            staging = self._seed_gather(self.caches, tbl)
         else:
-            staging = self.model.init_cache(1, self._stage_len)
+            staging = self.backend.fresh(1)
         if hit.state is not None:
-            staging = self.model.seed_from_snapshot(staging, hit.state)
+            staging = self.backend.seed_snapshot(staging, hit.state)
         return staging
 
     def _insert_boundary(self, prompt: list[int], slot: int, state):
-        """One cached boundary — THE per-family storage policy: ssm needs
-        only the state snapshot; attention families contribute the whole
-        pool blocks of the prompt prefix (any grid multiple); the hybrid
-        needs both halves at ONE boundary, so it stores only block-aligned
-        prompts.  Blocks always come from the slot's reserved table."""
-        fam = self.cfg.family
-        if fam == "ssm":
-            if state is not None:
-                self.prefix_cache.insert(prompt, state=state)
+        """Cache one finished-prefill boundary: the backend's
+        ``prefix_payload`` is THE per-family storage policy (ssm: state
+        snapshot only; attention: whole pool blocks; hybrid: both halves at
+        a block-aligned boundary)."""
+        payload = self.backend.prefix_payload(prompt, slot, state)
+        if payload is None:
             return
-        nb = len(prompt) // self.block_size
-        if nb == 0:
-            return
-        blocks = self._slot_blocks[slot][:nb]
-        if fam == "hybrid":
-            if state is None or len(prompt) % self.block_size:
-                return
-            self.prefix_cache.insert(prompt, blocks=blocks, state=state)
-        else:
-            self.prefix_cache.insert(prompt[:nb * self.block_size],
-                                     blocks=blocks)
+        tokens, blocks, state = payload
+        self.prefix_cache.insert(tokens, blocks=blocks, state=state)
 
     def _prefix_insert_from_slot(self, req: Request, slot: int):
         """Cold batched admission: cache the freshly-prefilled prefix —
-        state (if the family carries one) sliced from the slot's cache row
-        at the full prompt boundary."""
+        state (if the substrate carries one) sliced from the slot's cache
+        row at the full prompt boundary."""
         if self.prefix_cache is None:
             return
-        state = (self.model.state_snapshot(self.caches, slot)
-                 if self._needs_state else None)
+        state = self.backend.snapshot(self.caches, slot)
         self._insert_boundary(req.prompt, slot, state)
         self._note_evictions()
 
@@ -528,30 +603,144 @@ class Engine:
         if cp.captured is not None:
             self._insert_boundary(req.prompt[:cp.capture_at], slot,
                                   cp.captured)
-        state = (self.model.state_snapshot(staged_out, 0)
-                 if self._needs_state else None)
+        state = self.backend.snapshot(staged_out, 0)
         self._insert_boundary(req.prompt, slot, state)
         self._note_evictions()
 
     # --- public API -----------------------------------------------------
-    def submit(self, req: Request) -> bool:
-        """Admit one request; False if no slot is free (or, paged mode, the
-        block pool is short).  Long prompts under ``prefill_chunk`` start a
-        chunked admission — ``step()`` advances it one chunk per tick.
-        With the prefix cache on, admission first matches the longest
-        cached prompt prefix and prefills only the tail."""
+    def submit(self, req: Request, *, on_token=None) -> RequestHandle:
+        """Submit one request; the returned handle is truthy iff the
+        request was admitted immediately (falsy = no free slot, or — paged
+        — the block pool is short; the request is NOT queued).  Long
+        prompts under ``prefill_chunk`` start a chunked admission that
+        ``step()`` advances one chunk per tick.  ``on_token`` fires
+        synchronously for every emitted token."""
         self._validate(req)
+        if req.submit_ts is None:
+            req.submit_ts = time.perf_counter()
+        handle = RequestHandle(self, req, on_token=on_token)
+        handle._admitted = self._admit_handle(handle)
+        return handle
+
+    def _admit_handle(self, handle: RequestHandle) -> bool:
+        """Admission attempt for a handle: the streaming callback is live
+        exactly while the request is admitted — registered before the
+        attempt (the prefill emits the first token synchronously) and
+        unregistered again on failure, so an abandoned falsy handle leaks
+        nothing onto later requests."""
+        req, cb = handle.req, handle._on_token
+        if req.done:
+            return False                  # finished/cancelled: nothing to
+        if cb is not None:                # admit, nothing to register
+            cbs = self._callbacks.setdefault(req, [])
+            if cb not in cbs:             # idempotent: a backpressured
+                cbs.append(cb)            # submit retried with the same
+            # callback must not double-fire per token
+        admitted = self._try_admit(req)
+        if not admitted and cb is not None:
+            cbs = self._callbacks.get(req, [])
+            if cb in cbs:
+                cbs.remove(cb)
+            if not cbs:
+                self._callbacks.pop(req, None)
+        return admitted
+
+    def _try_admit(self, req: Request) -> bool:
+        """One admission attempt, sharing the scheduler's state.
+
+        * Stall bookkeeping: a request whose reservation already failed
+          retries only once capacity has actually grown (no radix-tree
+          re-walk, no refcount churn on every poll).
+        * Queue fairness: a direct admission must not leapfrog queued work
+          of equal-or-higher effective priority (the scheduler's
+          starvation/inversion bounds hold engine-wide), ages the queue
+          when it does win, and claims the request's own stale queue entry
+          so a request can never be admitted twice."""
+        if req.done:
+            return False
+        if self.active.get(req.rid) is req or \
+                any(cp.req is req for cp in self._chunked):
+            return True                       # already admitted
+        self._check_rid_free(req)
+        if self._admitting:
+            # re-entrant submit from an on_token callback while _admit is
+            # mid-flight: the in-flight request's slot is not recorded yet
+            # and must not be stolen — report backpressure instead
+            return False
         free = [s for s, r in enumerate(self.slots) if r is None]
         if not free:
             return False
+        head = self.scheduler.select()
+        if head is not None and head.req is not req and \
+                self.scheduler.effective_priority(head) >= req.priority:
+            # queued work outranks (or ties) this direct submit: let the
+            # next tick's _admit_pending serve the queue first
+            return False
+        need = self.backend.reservation_need(len(req.prompt), req.max_new)
+        if self.scheduler.stalled(req.rid, self.backend.free_capacity,
+                                  need):
+            return False
         hit = self._match_prefix(req)
         if not self._reserve(req, free[0], hit):
+            self.scheduler.note_stall(req.rid, self.backend.free_capacity,
+                                      need)
             return False
+        self.scheduler.clear_stall(req.rid)
+        self.scheduler.remove(req)            # claim our own stale entry
+        self.scheduler.age_all()
         if self._route_staged(req, hit):
             self._start_staged(req, free[0], hit)
         else:
             self._admit([req], free[:1])
         return True
+
+    def _check_rid_free(self, req: Request):
+        """Rids must be unique among LIVE requests (the active dict, the
+        sampling streams, and the metrics all key on them): admitting a
+        different object under a live rid corrupts both streams."""
+        if req.rid in self.active or \
+                any(cp.req.rid == req.rid for cp in self._chunked):
+            raise ValueError(
+                f"rid {req.rid} is already in flight for a different "
+                "request — rids must be unique among live requests")
+
+    def cancel(self, req: Request) -> bool:
+        """Cancel wherever the request is in its lifecycle: drop it from
+        the scheduler queue, abort a mid-flight staged admission (staged
+        cache rows and snapshot dropped, reserved blocks — including
+        copy-on-write shared prefix refs — released, pool accounting
+        exact), or stop an active decode and free its slot.  A request
+        found nowhere (mid-admission emit — e.g. an ``on_token`` callback
+        cancelling its own request — or never admitted) is marked done;
+        the admission paths check ``req.done`` after every emit and
+        release the slot themselves.  False if already finished."""
+        if req.done:
+            return False
+        if self.scheduler.remove(req):
+            self._finish_cancel(req)
+            return True
+        for cp in self._chunked:
+            if cp.req is req:
+                self._chunked.remove(cp)
+                self._free_slot(cp.slot)
+                self._finish_cancel(req)
+                return True
+        if self.active.get(req.rid) is req:
+            del self.active[req.rid]
+            for s, r in enumerate(self.slots):
+                if r is req:
+                    self._free_slot(s)
+                    break
+            self._finish_cancel(req)
+            return True
+        self._finish_cancel(req)
+        return True
+
+    def _finish_cancel(self, req: Request):
+        req.cancelled = True
+        self.scheduler.clear_stall(req.rid)
+        self._retire(req)
+        self.metrics.cancelled += 1
 
     def _bucket_len(self, n: int) -> int:
         return min(ceil_div(n, self.prefill_bucket) * self.prefill_bucket,
@@ -560,9 +749,17 @@ class Engine:
     def _admit(self, reqs: list[Request], slots: list[int]):
         """Prefill ``reqs`` into ``slots`` — one jit call per length bucket,
         one cache scatter per bucket (no per-row update round-trips).
-        Callers must have ``_validate``d (and, paged, ``_reserve``d)
-        each request first."""
+        Callers must have ``_validate``d (and ``_reserve``d) each request
+        first."""
         assert len(reqs) == len(slots)
+        prev_admitting = self._admitting
+        self._admitting = True
+        try:
+            self._admit_buckets(reqs, slots)
+        finally:
+            self._admitting = prev_admitting
+
+    def _admit_buckets(self, reqs: list[Request], slots: list[int]):
         buckets: dict[int, list[int]] = {}
         for i, r in enumerate(reqs):
             buckets.setdefault(self._bucket_len(len(r.prompt)), []).append(i)
@@ -575,8 +772,7 @@ class Engine:
                 toks[j, :len(p)] = p
                 last[j] = len(p) - 1
             slot_ids = jnp.asarray([slots[i] for i in idxs])
-            tables = (jnp.asarray(self.block_tables[[slots[i] for i in idxs]])
-                      if self.paged else None)
+            tables = self.backend.admission_tables([slots[i] for i in idxs])
             rids = jnp.asarray([reqs[i].rid for i in idxs], jnp.int32)
             t0 = time.perf_counter()
             nxt, self.caches = self._prefill(
@@ -587,14 +783,16 @@ class Engine:
             self.metrics.prefill_calls += 1
             for j, i in enumerate(idxs):
                 req, slot = reqs[i], slots[i]
-                req.out.append(int(nxt[j]))
+                self._emit(req, int(nxt[j]))
                 self.metrics.prefill_tokens += len(req.prompt)
                 self._prefix_insert_from_slot(req, slot)
-                if len(req.out) >= req.max_new:
+                if req.done or len(req.out) >= req.max_new:
                     # cap already met by the prefill-sampled token
-                    # (max_new=1): done at admission, never decode-ticked
-                    req.done = True
-                    self._release_slot_resources(slot)
+                    # (max_new=1: done at admission, never decode-ticked)
+                    # — or an on_token callback cancelled the request
+                    # mid-emit, before it ever joined a slot
+                    self._retire(req)
+                    self.backend.free_slot(slot)
                     continue
                 self.positions[slot] = len(req.prompt)
                 self.slots[slot] = req
@@ -616,15 +814,13 @@ class Engine:
         if hit is not None:
             staging = self._seed_staging(hit)
             consumed = hit.length
-            if self.paged:
-                scatter_table = self.block_tables[slot].copy()
-                scatter_table[:len(hit.blocks)] = GARBAGE_BLOCK
+            scatter_table = self.backend.cow_table(slot, len(hit.blocks))
             self.metrics.prefix_hits += 1
             self.metrics.prefix_tokens_reused += consumed
         else:
-            staging = self.model.init_cache(1, self._stage_len)
+            staging = self.backend.fresh(1)
         cap = None
-        if self.prefix_cache is not None and self._needs_state:
+        if self.prefix_cache is not None and self.backend.needs_state:
             c = self._capture_boundary(len(req.prompt))
             if consumed < c < len(req.prompt):
                 cap = c
@@ -666,21 +862,17 @@ class Engine:
             if self.prefill_chunk is not None:
                 self.metrics.prefill_chunks += 1
             if cp.capture_at == cp.consumed:
-                cp.captured = self.model.state_snapshot(cp.staging, 0)
+                cp.captured = self.backend.snapshot(cp.staging, 0)
             return
         # final piece: pad to the bucket grid (static shapes), sample the
         # request's first token, scatter the staged row into the slab/pool
         self._chunked.pop(0)
-        pl = min(self._bucket_len(remaining), self._stage_len - cp.consumed)
+        pl = min(self._bucket_len(remaining),
+                 self.backend.stage_len - cp.consumed)
         toks = np.zeros((1, pl), np.int32)
         toks[0, :remaining] = req.prompt[cp.consumed:]
         slot_ids = jnp.asarray([cp.slot])
-        if self.paged:
-            table = (cp.scatter_table if cp.scatter_table is not None
-                     else self.block_tables[cp.slot])
-            tables = jnp.asarray(table[None])
-        else:
-            tables = None
+        tables = self.backend.finish_tables(cp.slot, cp.scatter_table)
         nxt, self.caches, staged_out = self._chunk_finish(
             self.params, jnp.asarray(toks), cp.staging,
             jnp.int32(cp.consumed), jnp.asarray([remaining - 1]),
@@ -693,21 +885,77 @@ class Engine:
         if self.prefill_chunk is not None:
             self.metrics.prefill_chunks += 1
         self._finish_prefix_insert(cp, staged_out)
-        req.out.append(int(nxt[0]))
-        if len(req.out) >= req.max_new:
-            req.done = True
+        self._emit(req, int(nxt[0]))
+        if req.done or len(req.out) >= req.max_new:
+            # cap met, or an on_token callback cancelled mid-emit
+            self._retire(req)
             self._free_slot(cp.slot)
             return
         self.positions[cp.slot] = len(req.prompt)
         self.active[req.rid] = req
 
+    # --- scheduler-driven admission -------------------------------------
+    def _admit_pending(self):
+        """Admit queued requests into free slots, highest effective
+        priority first (deadline tie-break, one-bucket aging — see
+        :class:`Scheduler`).  Cold same-tick admissions batch into one
+        bucketed prefill call; a failed reservation stalls admission
+        (head-of-line) until capacity grows."""
+        free = [s for s, r in enumerate(self.slots) if r is None]
+        batch: list[Request] = []
+        batch_slots: list[int] = []
+        while self.scheduler.pending and free:
+            entry = self.scheduler.select()
+            req = entry.req
+            need = self.backend.reservation_need(len(req.prompt),
+                                                 req.max_new)
+            if self.scheduler.stalled(req.rid, self.backend.free_capacity,
+                                      need):
+                break
+            try:
+                self._validate(req)
+                self._check_rid_free(req)
+                if any(b.rid == req.rid for b in batch):
+                    raise ValueError(
+                        f"rid {req.rid} queued twice in one admission "
+                        "tick — rids must be unique among live requests")
+            except ValueError:
+                # direct scheduler pushes bypass serve()'s pre-validation:
+                # evict the poison entry so the queue stays serviceable,
+                # flush the requests already committed this tick (their
+                # blocks are reserved — dropping them would leak the
+                # reservation and hang their callers), then surface the
+                # error once
+                self.scheduler.drop(entry)
+                self._retire(req)
+                if batch:
+                    self._admit(batch, batch_slots)
+                raise
+            hit = self._match_prefix(req)
+            if not self._reserve(req, free[0], hit):
+                self.scheduler.note_stall(req.rid,
+                                          self.backend.free_capacity, need)
+                break          # head-of-line: wait for capacity to free
+            self.scheduler.clear_stall(req.rid)
+            self.scheduler.commit(entry)
+            slot = free.pop(0)
+            lone = not batch and not self.scheduler.pending
+            if self._route_staged(req, hit, lone):
+                self._start_staged(req, slot, hit)
+            else:
+                batch.append(req)
+                batch_slots.append(slot)
+        if batch:
+            self._admit(batch, batch_slots)
+
     # --- decode ---------------------------------------------------------
     def step(self):
-        """One engine tick: at most one chunk of pending prefill work, then
-        every active slot advances one token at its own position (free or
-        still-admitting rows compute masked garbage that is ignored — a
-        mid-admission slot's garbage writes are fully overwritten by its
-        final staged-cache scatter)."""
+        """One engine tick: admit queued work into free slots, run at most
+        one chunk of pending prefill, then every active slot advances one
+        token at its own position (free or still-admitting rows compute
+        masked garbage that is ignored — a mid-admission slot's garbage
+        writes are fully overwritten by its final staged-cache scatter)."""
+        self._admit_pending()
         self._advance_chunked()
         if not self.active:
             return
@@ -721,19 +969,8 @@ class Engine:
                 rids[s] = req.rid
                 steps[s] = len(req.out)
                 n_active += 1
-        tables = None
-        if self.paged:
-            tables = self.block_tables
-            if self._chunked:
-                # mid-admission slots decode masked garbage at position 0 —
-                # park their rows on the garbage block so the write can
-                # never land in a reserved block (a warm admission's table
-                # starts with SHARED prefix blocks, which must never be
-                # written in place)
-                tables = tables.copy()
-                for cp in self._chunked:
-                    tables[cp.slot, :] = GARBAGE_BLOCK
-            tables = jnp.asarray(tables)
+        tables = self.backend.decode_tables([cp.slot for cp in
+                                             self._chunked])
         t0 = time.perf_counter()
         nxt, self.caches = self._decode(
             self.params, jnp.asarray(toks), self.caches,
@@ -747,53 +984,41 @@ class Engine:
         for s, req in enumerate(self.slots):
             if req is None or req.rid not in self.active:
                 continue
-            req.out.append(int(nxt[s]))
+            self._emit(req, int(nxt[s]))
+            if req.done:
+                # an on_token callback cancelled from inside the emit:
+                # cancel() already freed the slot and active entry
+                continue
             self.positions[s] += 1
             if len(req.out) >= req.max_new or \
                     self.positions[s] >= self.max_seq - 1:
-                req.done = True
-                del self.active[req.rid]
+                self._retire(req)
+                self.active.pop(req.rid, None)
                 self._free_slot(s)
 
     def serve(self, requests: list[Request], max_ticks: int = 512) -> dict:
-        """Run to completion (or ``max_ticks``): admit pending requests into
-        free slots in batched buckets (FIFO; paged mode backpressures the
-        head when the block pool is short), then tick.  Returned stats
-        cover THIS call only (``Engine.metrics`` keeps lifetime totals)."""
-        pending = list(requests)
+        """Queue ``requests`` on the scheduler and run to completion (or
+        ``max_ticks``): every tick admits queued requests into free slots
+        in priority order (paged mode backpressures the head of the queue
+        when the block pool is short), then decodes.  Returned stats cover
+        THIS call only (``Engine.metrics`` keeps lifetime totals);
+        requests still queued at ``max_ticks`` stay queued for the next
+        ``serve()``/``step()`` call.  Requests are validated BEFORE they
+        are queued — an invalid one raises here and nothing is enqueued
+        (the persistent scheduler must never hold a request admission
+        would reject forever)."""
+        for r in requests:
+            self._validate(r)
+        now = time.perf_counter()
+        for r in requests:
+            if r.submit_ts is None:
+                r.submit_ts = now
+            self.scheduler.push(r)
         start = replace(self.metrics)
         t0 = time.time()
         ticks = 0
-        stall = None               # (rid, free_blocks) at the last failure
-        while (pending or self.active or self._chunked) \
+        while (self.scheduler.pending or self.active or self._chunked) \
                 and ticks < max_ticks:
-            free = [s for s, r in enumerate(self.slots) if r is None]
-            batch, batch_slots = [], []
-            while pending and free:
-                req = pending[0]
-                # a backpressured head retries only once blocks have freed:
-                # re-matching every tick would walk the radix tree, churn
-                # ref/release on the shared blocks, and re-stamp the matched
-                # path's LRU age for nothing
-                if stall is not None and stall[0] == req.rid \
-                        and self.allocator.free_blocks <= stall[1]:
-                    break
-                self._validate(req)
-                hit = self._match_prefix(req)
-                if not self._reserve(req, free[0], hit):
-                    stall = (req.rid, self.allocator.free_blocks)
-                    break          # head-of-line: wait for blocks to free
-                stall = None
-                pending.pop(0)
-                slot = free.pop(0)
-                lone = not batch and len(pending) == 0
-                if self._route_staged(req, hit, lone):
-                    self._start_staged(req, slot, hit)
-                else:
-                    batch.append(req)
-                    batch_slots.append(slot)
-            if batch:
-                self._admit(batch, batch_slots)
             self.step()
             ticks += 1
         stats = self.metrics.since(start).summary(self.max_batch)

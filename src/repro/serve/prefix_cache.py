@@ -18,7 +18,7 @@ Node payloads (either or both, per serving family):
 
 * ``blocks`` — physical ids of the paged-pool blocks holding this prefix's
   attention KV, ``floor(depth / block_size)`` of them (whole blocks only).
-  The cache co-owns them through the allocator's refcounts; an admission
+  The cache co-owns them through the backend's block refcounts; an admission
   that matches shares them COPY-ON-WRITE into the request's block table —
   the request refs them, reads them in place, and never writes them (tail
   writes land in freshly-allocated private blocks; the engine redirects the
@@ -34,7 +34,7 @@ Node payloads (either or both, per serving family):
 
 Eviction is LRU over leaf nodes.  When the block pool runs short
 (``evict_for``), only *unreferenced* leaves count — nodes whose blocks no
-active request shares (allocator refcount == the cache's own holds); blocks
+active request shares (backend refcount == the cache's own holds); blocks
 return to the free pool strictly at refcount 0, so eviction can never yank
 a page out from under a live block table.  The node-budget trim
 (``max_nodes``, bounding snapshot memory) may drop any LRU leaf — request
@@ -43,8 +43,6 @@ refs keep shared block content alive regardless.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-
-from repro.serve.paged import BlockAllocator
 
 
 class _Node:
@@ -71,25 +69,28 @@ class PrefixHit:
 
 
 class PrefixCache:
-    """Radix tree + payload store.  ``block_size``/``allocator`` bind the
-    paged backend (attention KV blocks); leave them None for the pure
-    recurrent-state backend (mamba2's dense engine)."""
+    """Radix tree + payload store.  ``block_size``/``backend`` bind the
+    paged substrate: ``backend`` is any object exposing the narrow block-op
+    surface ``ref(blocks)`` / ``release(blocks)`` / ``refcount(block)`` /
+    ``free_blocks`` (a ``repro.serve.backend.PagedPool`` in the engine; a
+    raw ``BlockAllocator`` satisfies the same protocol in tests).  Leave
+    both None for the pure recurrent-state backend (mamba2's dense
+    engine)."""
 
     def __init__(self, *, block_size: int | None = None,
-                 allocator: BlockAllocator | None = None,
-                 max_nodes: int = 256):
-        assert (block_size is None) == (allocator is None)
+                 backend=None, max_nodes: int = 256):
+        assert (block_size is None) == (backend is None)
         if max_nodes < 1:
             raise ValueError(f"max_nodes must be >= 1, got {max_nodes}")
         self.block_size = block_size
-        self.allocator = allocator
+        self.backend = backend
         self.max_nodes = max_nodes
         self._root = _Node(None, (), 0)
         self._tick = 0
         self.node_count = 0
         self.evictions = 0            # lifetime total (engine metrics diff)
         # cache-side owner count per block id: how many node payloads hold
-        # it.  allocator.refcount(b) == _block_owners[b] <=> no live request
+        # it.  backend.refcount(b) == _block_owners[b] <=> no live request
         # shares b, which is what pool-shortage eviction needs to know.
         self._block_owners: dict[int, int] = {}
 
@@ -207,7 +208,7 @@ class PrefixCache:
         if blocks is not None and node.blocks is None and self.block_size:
             keep = list(blocks[:len(tokens) // self.block_size])
             if keep:
-                self.allocator.ref(keep)
+                self.backend.ref(keep)
                 self._own(keep, +1)
                 node.blocks = keep
         if state is not None and node.state is None:
@@ -230,7 +231,7 @@ class PrefixCache:
         if child.blocks is not None and self.block_size is not None:
             derived = list(child.blocks[:mid.depth // self.block_size])
             if derived:
-                self.allocator.ref(derived)
+                self.backend.ref(derived)
                 self._own(derived, +1)
                 mid.blocks = derived
         self.node_count += 1
@@ -239,12 +240,12 @@ class PrefixCache:
     # --- eviction -------------------------------------------------------
     def evict_for(self, n_blocks: int) -> int:
         """Pool shortage: evict LRU *unreferenced* leaves until the
-        allocator can hand out ``n_blocks`` (or no candidate remains).
+        backend can hand out ``n_blocks`` (or no candidate remains).
         Returns the number of nodes evicted."""
-        if self.allocator is None:
+        if self.backend is None:
             return 0
         count = 0
-        while self.allocator.free_blocks < n_blocks:
+        while self.backend.free_blocks < n_blocks:
             victim = self._lru_leaf(unreferenced_only=True)
             if victim is None:
                 break
@@ -277,7 +278,7 @@ class PrefixCache:
         accounted for by cache-node payloads."""
         if node.blocks is None:
             return True
-        return all(self.allocator.refcount(b) == self._block_owners.get(b, 0)
+        return all(self.backend.refcount(b) == self._block_owners.get(b, 0)
                    for b in node.blocks)
 
     def _lru_leaf(self, *, unreferenced_only: bool) -> _Node | None:
@@ -299,7 +300,7 @@ class PrefixCache:
             self.evictions += 1
         if node.blocks is not None:
             self._own(node.blocks, -1)
-            self.allocator.release(node.blocks)   # frees only at refcount 0
+            self.backend.release(node.blocks)   # frees only at refcount 0
             node.blocks = None
         node.state = None
         node.parent.children.pop(node.edge[0])

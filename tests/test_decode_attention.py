@@ -88,7 +88,8 @@ PAGED_CODE = textwrap.dedent("""
         model = get_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
         paged = mode != "dense"
-        state = (model.init_cache(2, 16, block_size=4, num_blocks=12)
+        from repro.models.common import CacheSpec
+        state = (model.init_cache(2, 16, spec=CacheSpec(4, 12))
                  if paged else model.init_cache(2, 16))
         step = jax.jit(model.decode_step, static_argnames=())
         ctx = activation_sharding(mesh) if mode == "paged_sharded" else None
@@ -98,7 +99,7 @@ PAGED_CODE = textwrap.dedent("""
                 idx = jnp.full((2,), i, jnp.int32)
                 if paged:
                     lg, state = step(params, toks[:, i:i+1], state, idx,
-                                     block_tables=bt)
+                                     tables=bt)
                 else:
                     lg, state = step(params, toks[:, i:i+1], state, idx)
                 seq.append(np.asarray(lg[:, 0], np.float32))

@@ -78,28 +78,37 @@ def test_failed_alloc_succeeds_after_release(num_blocks, want):
 @settings(max_examples=60, deadline=None)
 @given(data=st.data())
 def test_refcount_cow_invariants(data):
-    """Random admit / finish / evict sequences through the prefix cache:
+    """Random admit / complete / cancel / finish / evict sequences through
+    the prefix cache, mirroring the engine's staged-admission lifecycle
+    (admit = reserve shared refs + private tail, complete = staged prefill
+    lands and inserts its prefix, cancel = mid-chunked-prefill abort that
+    releases the whole reservation, finish = a decoded request frees its
+    slot):
 
       * copy-on-write — every block an admission WRITES (its private tail)
         is solely owned at write time; every shared block has >= 2 owners
         and is never in the written set;
+      * cancellation exact — a cancelled staged admission returns shared
+        blocks to their pre-admission refcounts and frees its private tail
+        (nothing was inserted, so nothing leaks);
       * eviction only at refcount 0 — a block reaches the free pool
         exactly when its last owner releases it, never earlier;
       * accounting exact — free + refcounted == capacity after every op,
-        and a full teardown (finish all + sweep the cache) restores the
-        empty pool.
+        and a full teardown (finish/cancel all + sweep the cache) restores
+        the empty pool.
     """
     bs = 4
     num_blocks = data.draw(st.integers(4, 24), label="num_blocks")
     capacity = num_blocks - 1
     max_seq = capacity * bs
     a = BlockAllocator(num_blocks, bs)
-    cache = PrefixCache(block_size=bs, allocator=a, max_nodes=8)
-    live: list[list[int]] = []                # admitted requests' tables
+    cache = PrefixCache(block_size=bs, backend=a, max_nodes=8)
+    live: list[list[int]] = []                # decoded requests' tables
+    staged: list[tuple] = []                  # (prompt, table) mid-prefill
     token = st.integers(0, 2)                 # tiny alphabet: forces sharing
     for _ in range(data.draw(st.integers(1, 25), label="n_ops")):
-        op = data.draw(st.sampled_from(["admit", "admit", "finish"]),
-                       label="op")
+        op = data.draw(st.sampled_from(["admit", "admit", "complete",
+                                        "cancel", "finish"]), label="op")
         if op == "admit":
             plen = data.draw(st.integers(1, max_seq - 1), label="plen")
             prompt = data.draw(st.lists(token, min_size=plen,
@@ -121,12 +130,21 @@ def test_refcount_cow_invariants(data):
             assert all(a.writable(b) for b in fresh)
             assert all(a.refcount(b) >= 2 and not a.writable(b)
                        for b in shared)
-            table = shared + fresh
-            nb = plen // bs
-            if nb:
+            staged.append((prompt, shared + fresh))
+        elif op == "complete" and staged:
+            prompt, table = staged.pop(data.draw(
+                st.integers(0, len(staged) - 1), label="done"))
+            nb = len(prompt) // bs            # prefill landed: cache the
+            if nb:                            # whole-block prefix
                 cache.insert(prompt[:nb * bs], blocks=table[:nb])
             live.append(table)
-        elif live:
+        elif op == "cancel" and staged:
+            # mid-chunked-prefill cancel: the whole reservation (shared
+            # refs AND private tail) goes back in one release
+            _, table = staged.pop(data.draw(
+                st.integers(0, len(staged) - 1), label="victim"))
+            a.release(table)
+        elif op == "finish" and live:
             a.release(live.pop(data.draw(
                 st.integers(0, len(live) - 1), label="victim")))
         # pool accounting exact after every op
@@ -135,8 +153,11 @@ def test_refcount_cow_invariants(data):
         assert a.used_blocks == held
         # a block is free iff its refcount is 0 (eviction never jumps it)
         assert all(a.refcount(b) == 0 for b in a._free_set)
-        # live tables always survive eviction (their refs pin the blocks)
+        # live/staged tables always survive eviction (their refs pin them)
         assert all(a.refcount(b) >= 1 for t in live for b in t)
+        assert all(a.refcount(b) >= 1 for _, t in staged for b in t)
+    for _, t in staged:
+        a.release(t)                          # cancel the rest
     for t in live:
         a.release(t)
     cache.evict_for(num_blocks)               # sweeps every remaining node

@@ -50,7 +50,7 @@ def _serve_each(eng, prompts, max_new=5):
 
 def test_radix_insert_match_split_blocks():
     a = BlockAllocator(20, 4)
-    pc = PrefixCache(block_size=4, allocator=a, max_nodes=32)
+    pc = PrefixCache(block_size=4, backend=a, max_nodes=32)
     p1 = list(range(1, 13))                   # 12 tokens = 3 whole blocks
     b1 = a.alloc(3)
     pc.insert(p1, blocks=b1)
@@ -102,7 +102,7 @@ def test_lru_eviction_on_node_budget():
 
 def test_pool_shortage_evicts_only_unreferenced_nodes():
     a = BlockAllocator(6, 4)                  # 5 usable blocks
-    pc = PrefixCache(block_size=4, allocator=a, max_nodes=32)
+    pc = PrefixCache(block_size=4, backend=a, max_nodes=32)
     b1 = a.alloc(2)
     pc.insert([1] * 8, blocks=b1)
     a.release(b1)                             # request done: cache-only refs
@@ -221,8 +221,8 @@ def test_shared_blocks_never_written_in_place():
         return [np.asarray(jnp.take(leaf, ids, axis=ax))
                 for leaf, ax, is_pool in zip(
                     jax.tree.leaves(eng.caches),
-                    jax.tree.leaves(eng._batch_axes),
-                    jax.tree.leaves(eng._paged_leaves)) if is_pool]
+                    jax.tree.leaves(eng.backend._batch_axes),
+                    jax.tree.leaves(eng.backend._pool_leaves)) if is_pool]
 
     before = pool_snapshot()
     _serve_each(eng, prompts[1:])             # warm admission + decode
@@ -249,7 +249,7 @@ def test_eviction_under_pool_pressure_keeps_serving():
     # the cache's surviving refs are exactly the outstanding pool blocks,
     # and a full sweep returns every one of them
     assert warm.allocator.used_blocks > 0
-    warm.prefix_cache.evict_for(warm.num_blocks)
+    warm.prefix_cache.evict_for(warm.backend.num_blocks)
     assert warm.allocator.used_blocks == 0
 
 

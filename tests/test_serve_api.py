@@ -1,0 +1,733 @@
+"""Serving API v2: EngineConfig, deprecation shim, request lifecycle.
+
+The load-bearing pins:
+  * legacy ``Engine(cfg, params, **knobs)`` warns ``DeprecationWarning``
+    once and produces a token-identical engine to the ``EngineConfig``
+    path;
+  * incremental tokens from a ``RequestHandle`` (generator AND on-token
+    callback) equal the final ``req.out`` exactly;
+  * ``cancel()`` releases blocks and staged state mid-chunked-prefill and
+    restores shared-block refcounts after a warm prefix admission, with
+    exact pool accounting;
+  * the scheduler orders by priority class with deadline tie-breaks, ages
+    at most one bucket (priority inversion bound), never starves, and owns
+    the head-of-line stall state ``submit()``/``serve()`` share;
+  * ``repro.serve.engine`` is substrate-blind: every substrate decision
+    lives behind ``CacheBackend``.
+"""
+import argparse
+import inspect
+import random
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models.registry import get_config, get_model
+from repro.serve.config import EngineConfig
+from repro.serve.engine import Engine, Request, Scheduler
+from repro.serve.sampling import SamplingConfig
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                           # property tier is optional
+    HAVE_HYPOTHESIS = False
+
+
+def _setup(arch="yi-9b", **over):
+    cfg = get_config(arch).reduced(dtype="float32", attn_impl="full", **over)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    return cfg, params
+
+
+def _drain(eng, max_ticks=256):
+    ticks = 0
+    while not eng.idle and ticks < max_ticks:
+        eng.step()
+        ticks += 1
+    assert ticks < max_ticks, "engine failed to drain"
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig + deprecation shim
+# ---------------------------------------------------------------------------
+
+def test_engine_config_validation():
+    EngineConfig()                            # defaults are valid
+    with pytest.raises(ValueError, match="prefill_bucket"):
+        EngineConfig(prefill_bucket=0)
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        EngineConfig(prefill_chunk=0)
+    with pytest.raises(ValueError, match="max_batch"):
+        EngineConfig(max_batch=0)
+    with pytest.raises(ValueError, match="starvation_bound"):
+        EngineConfig(starvation_bound=0)
+    # family cross-rules, single-sourced
+    with pytest.raises(ValueError, match="paged"):
+        EngineConfig(paged=True).validate("ssm")
+    with pytest.raises(ValueError, match="modality"):
+        EngineConfig().validate("vlm")
+    with pytest.raises(ValueError, match="modality"):
+        EngineConfig().validate("encdec")
+    with pytest.raises(ValueError, match="prefix_cache"):
+        EngineConfig(prefix_cache=True).validate("dense")
+    with pytest.raises(ValueError, match="prefix_cache"):
+        EngineConfig(prefix_cache=True).validate("hybrid")
+    EngineConfig(prefix_cache=True).validate("ssm")
+    EngineConfig(paged=True, prefix_cache=True).validate("hybrid")
+
+
+def test_engine_config_from_args():
+    ap = argparse.ArgumentParser()
+    EngineConfig.add_cli_args(ap)
+    args = ap.parse_args(["--max-batch", "3", "--paged", "--block-size",
+                          "8", "--prefill-chunk", "4", "--sampling",
+                          "top_k", "--top-k", "5", "--temperature", "0.7",
+                          "--seed", "9"])
+    c = EngineConfig.from_args(args, max_seq=64)
+    assert c.max_batch == 3 and c.max_seq == 64
+    assert c.paged and c.block_size == 8 and c.prefill_chunk == 4
+    assert c.sampling == SamplingConfig(mode="top_k", top_k=5,
+                                        temperature=0.7)
+    assert c.seed == 9
+    # flags left unset fall back to the dataclass defaults
+    args2 = ap.parse_args([])
+    c2 = EngineConfig.from_args(args2)
+    assert c2.max_batch == 8 and not c2.paged and c2.prefill_chunk is None
+
+
+def test_legacy_kwargs_warn_once_and_match_config_path():
+    """Satellite pin: legacy kwargs -> exactly one DeprecationWarning and a
+    token-identical engine to the EngineConfig construction."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, n).tolist() for n in (5, 9)]
+    knobs = dict(max_batch=2, max_seq=48, paged=True, block_size=8, seed=3)
+
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        legacy = Engine(cfg, params, **knobs)
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1
+    assert "EngineConfig" in str(dep[0].message)
+
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        v2 = Engine(cfg, params, EngineConfig(**knobs))
+    assert not [w for w in rec if issubclass(w.category, DeprecationWarning)]
+
+    for eng in (legacy, v2):
+        reqs = [Request(rid=i, prompt=p, max_new=5)
+                for i, p in enumerate(prompts)]
+        assert eng.serve(reqs)["done"]
+        eng._outs = [r.out for r in reqs]
+    assert legacy._outs == v2._outs
+
+    with pytest.raises(TypeError):            # both config and kwargs
+        Engine(cfg, params, EngineConfig(), max_batch=2)
+    with pytest.raises(TypeError):            # unknown legacy kwarg
+        Engine(cfg, params, bogus_knob=1)
+
+
+def test_engine_module_is_substrate_blind():
+    """Acceptance pin: every substrate decision lives behind CacheBackend —
+    the engine module neither branches on family capability sets nor
+    probes cache leaves nor touches the block allocator."""
+    import repro.serve.engine as engine_mod
+    src = inspect.getsource(engine_mod)
+    for forbidden in ("PAGED_FAMILIES", "PADDED_PREFILL_FAMILIES",
+                      "_find_paged_leaves", "_find_batch_axes",
+                      "BlockAllocator", "GARBAGE_BLOCK", "blocks_needed"):
+        assert forbidden not in src, forbidden
+
+
+# ---------------------------------------------------------------------------
+# streaming
+# ---------------------------------------------------------------------------
+
+def test_streaming_tokens_match_final_output():
+    """Acceptance pin: the incremental stream (generator AND on-token
+    callback) equals the final ``req.out`` exactly, and matches a fresh
+    engine serving the same request."""
+    cfg, params = _setup()
+    eng = Engine(cfg, params, EngineConfig(max_batch=2, max_seq=48))
+    seen = []
+    req = Request(rid=7, prompt=[5, 6, 7, 8], max_new=6)
+    handle = eng.submit(req, on_token=seen.append)
+    assert handle                             # admitted immediately
+    streamed = list(handle.tokens())
+    assert handle.done and not handle.cancelled
+    assert streamed == handle.out == req.out
+    assert seen == streamed
+    assert len(streamed) == 6
+
+    ref_eng = Engine(cfg, params, EngineConfig(max_batch=1, max_seq=48))
+    ref = Request(rid=7, prompt=[5, 6, 7, 8], max_new=6)
+    assert ref_eng.serve([ref])["done"]
+    assert streamed == ref.out
+
+
+def test_streaming_unadmitted_handle_waits_for_capacity():
+    """A falsy handle's generator re-attempts admission between ticks and
+    still streams the exact final output."""
+    cfg, params = _setup()
+    eng = Engine(cfg, params, EngineConfig(max_batch=1, max_seq=48))
+    first = Request(rid=0, prompt=[1, 2, 3], max_new=4)
+    assert eng.submit(first)
+    second = Request(rid=1, prompt=[4, 5], max_new=3)
+    handle = eng.submit(second)
+    assert not handle                         # no slot free yet
+    streamed = list(handle.tokens())
+    assert first.done and second.done
+    assert streamed == second.out and len(streamed) == 3
+
+    ref_eng = Engine(cfg, params, EngineConfig(max_batch=1, max_seq=48))
+    ref = Request(rid=1, prompt=[4, 5], max_new=3)
+    assert ref_eng.serve([ref])["done"]
+    assert streamed == ref.out
+
+
+def test_streaming_interleaves_with_chunked_admission():
+    """Streaming one handle while a chunked admission is mid-flight: both
+    finish and the stream stays exact."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(2)
+    eng = Engine(cfg, params, EngineConfig(max_batch=2, max_seq=48,
+                                           prefill_chunk=8))
+    short = Request(rid=0, prompt=[3, 1, 4], max_new=8)
+    h_short = eng.submit(short)
+    long = Request(rid=1,
+                   prompt=rng.integers(1, cfg.vocab_size, 20).tolist(),
+                   max_new=3)
+    assert eng.submit(long)                   # staged admission starts
+    streamed = list(h_short.tokens())
+    assert streamed == short.out and short.done
+    _drain(eng)
+    assert long.done and len(long.out) == 3
+
+
+# ---------------------------------------------------------------------------
+# cancellation
+# ---------------------------------------------------------------------------
+
+def test_cancel_mid_chunked_prefill_releases_blocks_exactly():
+    """Satellite pin: cancelling a staged (chunked) admission releases its
+    reserved blocks and staged state; pool accounting is exact and the
+    engine keeps serving token-identically."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(4)
+    eng = Engine(cfg, params, EngineConfig(max_batch=2, max_seq=64,
+                                           paged=True, block_size=8,
+                                           prefill_chunk=8))
+    short = Request(rid=0, prompt=[1, 2, 3], max_new=12)
+    assert eng.submit(short)
+    used0 = eng.allocator.used_blocks
+    free0 = eng.allocator.free_blocks
+    long = Request(rid=1,
+                   prompt=rng.integers(1, cfg.vocab_size, 30).tolist(),
+                   max_new=4)
+    handle = eng.submit(long)
+    assert handle and long.out == []          # staged, nothing emitted
+    eng.step()                                # one chunk lands
+    assert eng._chunked and long.out == []
+    assert eng.allocator.used_blocks > used0  # tail blocks reserved
+    assert handle.cancel()
+    assert long.cancelled and long.done and long.out == []
+    assert not eng._chunked
+    assert eng.allocator.used_blocks == used0
+    assert eng.allocator.free_blocks == free0
+    assert not handle.cancel()                # idempotent: nothing left
+    assert eng.metrics.cancelled == 1
+
+    _drain(eng)                               # short request unharmed
+    ref_eng = Engine(cfg, params, EngineConfig(max_batch=1, max_seq=64))
+    ref = Request(rid=0, prompt=[1, 2, 3], max_new=12)
+    assert ref_eng.serve([ref])["done"]
+    assert short.out == ref.out
+    assert eng.allocator.used_blocks == 0
+
+
+def test_cancel_warm_prefix_admission_restores_refcounts():
+    """Satellite pin: cancelling a warm (prefix-cache) admission returns
+    every shared block to its pre-admission refcount and frees the private
+    tail; the cached prefix still serves later admissions."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(5)
+    head = rng.integers(1, cfg.vocab_size, 16).tolist()
+    eng = Engine(cfg, params, EngineConfig(max_batch=2, max_seq=64,
+                                           paged=True, block_size=8,
+                                           prefix_cache=True,
+                                           prefill_chunk=8))
+    cold = Request(rid=0, prompt=head + [7, 8], max_new=2)
+    assert eng.serve([cold])["done"]          # populates the radix tree
+
+    warm_prompt = head + rng.integers(1, cfg.vocab_size, 6).tolist()
+    hit = eng.prefix_cache.match(warm_prompt, max_len=len(warm_prompt) - 1)
+    assert hit is not None and len(hit.blocks) == 2
+    refs0 = [eng.allocator.refcount(b) for b in hit.blocks]
+    free0 = eng.allocator.free_blocks
+
+    warm = Request(rid=1, prompt=warm_prompt, max_new=3)
+    handle = eng.submit(warm)
+    assert handle and eng._chunked            # staged warm admission
+    assert [eng.allocator.refcount(b) for b in hit.blocks] == \
+        [r + 1 for r in refs0]                # COW share took a ref
+    assert eng.allocator.free_blocks < free0  # private tail allocated
+    assert handle.cancel()
+    assert [eng.allocator.refcount(b) for b in hit.blocks] == refs0
+    assert eng.allocator.free_blocks == free0
+    assert warm.cancelled and warm.out == []
+
+    # the cached head still serves: same warm prompt, token-identical
+    redo = Request(rid=2, prompt=warm_prompt, max_new=3)
+    assert eng.serve([redo])["done"]
+    ref_eng = Engine(cfg, params, EngineConfig(max_batch=1, max_seq=64,
+                                               paged=True, block_size=8))
+    ref = Request(rid=2, prompt=warm_prompt, max_new=3)
+    assert ref_eng.serve([ref])["done"]
+    assert redo.out == ref.out
+
+
+def test_cancel_active_and_queued_requests():
+    cfg, params = _setup()
+    eng = Engine(cfg, params, EngineConfig(max_batch=1, max_seq=48))
+    active = Request(rid=0, prompt=[1, 2], max_new=30)
+    h_active = eng.submit(active)
+    assert h_active
+    eng.step()
+    emitted = len(active.out)
+    assert h_active.cancel()
+    assert active.cancelled and len(active.out) == emitted
+    assert eng.slots == [None] and not eng.active
+
+    # queued via serve(): cancel before admission emits nothing
+    queued = Request(rid=1, prompt=[3, 4], max_new=2)
+    eng.scheduler.push(queued)
+    assert eng.cancel(queued)
+    assert queued.cancelled and queued.out == []
+    assert eng.scheduler.pending == 0
+    # a falsy (never queued) handle can still be closed out
+    blocked_eng = Engine(cfg, params, EngineConfig(max_batch=1, max_seq=48))
+    assert blocked_eng.submit(Request(rid=2, prompt=[1], max_new=9))
+    h = blocked_eng.submit(Request(rid=3, prompt=[2], max_new=1))
+    assert not h and h.cancel() and h.cancelled
+
+
+def test_cancel_from_on_token_callback_is_reentrancy_safe():
+    """Review pin: cancelling from inside an on_token callback (the
+    stop-sequence streaming pattern) must not crash the decode loop nor
+    resurrect the request."""
+    cfg, params = _setup()
+    eng = Engine(cfg, params, EngineConfig(max_batch=2, max_seq=48))
+    req = Request(rid=0, prompt=[5, 6, 7], max_new=10)
+    handle = eng.submit(req)
+
+    def stop_after(n):
+        def cb(tok):
+            if len(req.out) >= n:
+                handle.cancel()
+        return cb
+
+    eng._callbacks.setdefault(req, []).append(stop_after(3))
+    assert handle
+    for _ in range(12):
+        if req.done:
+            break
+        eng.step()                            # must not KeyError
+    assert req.cancelled and len(req.out) == 3
+    assert eng.slots == [None, None] and not eng.active
+
+    # cancel on the PREFILL emit (mid-admission): the request must not be
+    # resurrected into a slot after cancel() returned True
+    req2 = Request(rid=1, prompt=[1, 2], max_new=5)
+    eng.submit(req2, on_token=lambda tok: eng.cancel(req2))
+    assert req2.cancelled and len(req2.out) == 1
+    assert eng.slots == [None, None] and not eng.active
+    if eng.allocator is not None:
+        assert eng.allocator.used_blocks == 0
+    # the engine still serves normally afterwards
+    ok = Request(rid=2, prompt=[3, 4], max_new=3)
+    assert eng.serve([ok])["done"] and len(ok.out) == 3
+
+
+def test_invalid_request_does_not_poison_the_scheduler():
+    """Review pin: serve() validates BEFORE queueing — an oversized
+    request raises and the engine stays fully serviceable."""
+    cfg, params = _setup()
+    eng = Engine(cfg, params, EngineConfig(max_batch=1, max_seq=16))
+    bad = Request(rid=0, prompt=list(range(1, 40)), max_new=2)
+    with pytest.raises(ValueError):
+        eng.serve([bad])
+    assert eng.scheduler.pending == 0
+    good = Request(rid=1, prompt=[1, 2, 3], max_new=2)
+    assert eng.serve([good])["done"] and len(good.out) == 2
+    # a poison entry pushed straight onto the scheduler is evicted on the
+    # first admission attempt instead of wedging the queue forever
+    eng.scheduler.push(bad)
+    with pytest.raises(ValueError):
+        eng.step()
+    assert eng.scheduler.pending == 0
+    good2 = Request(rid=2, prompt=[4, 5], max_new=2)
+    assert eng.serve([good2])["done"]
+
+
+def test_on_token_callback_registration_is_idempotent():
+    """Review pin: a backpressured submit retried with the same callback
+    fires once per token, and a cancelled falsy handle leaves no stale
+    callback behind for a later request reusing the rid."""
+    cfg, params = _setup()
+    eng = Engine(cfg, params, EngineConfig(max_batch=1, max_seq=48))
+    assert eng.submit(Request(rid=0, prompt=[1], max_new=6))
+    seen = []
+    retry = Request(rid=1, prompt=[2, 3], max_new=3)
+    assert not eng.submit(retry, on_token=seen.append)
+    h = eng.submit(retry, on_token=seen.append)   # the documented retry
+    streamed = list(h.tokens()) if h else list(
+        eng.submit(retry, on_token=seen.append).tokens())
+    assert retry.done
+    assert seen == retry.out == streamed          # no double-fire
+
+    # stale-callback leak: cancel a never-admitted handle, then reuse rid
+    eng2 = Engine(cfg, params, EngineConfig(max_batch=1, max_seq=48))
+    assert eng2.submit(Request(rid=0, prompt=[1], max_new=4))
+    ghost_tokens = []
+    ghost = eng2.submit(Request(rid=7, prompt=[2], max_new=2),
+                        on_token=ghost_tokens.append)
+    assert not ghost                          # falsy: already unregistered
+    assert not eng2._callbacks
+    assert ghost.cancel()
+    _drain(eng2)
+    reuse = Request(rid=7, prompt=[3, 4], max_new=2)
+    assert eng2.serve([reuse])["done"]
+    assert ghost_tokens == []                     # ghost never fired
+
+
+# ---------------------------------------------------------------------------
+# scheduler: priority / deadline / aging / stall bookkeeping
+# ---------------------------------------------------------------------------
+
+def _req(rid, pri=0, dl=None):
+    return Request(rid=rid, prompt=[1], max_new=1, priority=pri, deadline=dl)
+
+
+def test_scheduler_priority_and_deadline_order():
+    s = Scheduler(starvation_bound=8)
+    s.push(_req(0, pri=0, dl=5.0))
+    s.push(_req(1, pri=0, dl=1.0))
+    s.push(_req(2, pri=1))
+    order = []
+    while s.pending:
+        e = s.select()
+        s.commit(e)
+        order.append(e.req.rid)
+    assert order == [2, 1, 0]                 # class first, then deadline
+    # equal class and deadline: arrival order
+    s.push(_req(3))
+    s.push(_req(4))
+    assert s.select().req.rid == 3
+
+
+def test_scheduler_aging_promotes_one_bucket():
+    s = Scheduler(starvation_bound=2)
+    s.push(_req(0, pri=0))
+    for rid in (1, 2):                        # two high admissions pass it
+        s.push(_req(rid, pri=1))
+        e = s.select()
+        assert e.req.rid == rid
+        s.commit(e)
+    s.push(_req(3, pri=1))                    # newer high arrival
+    e = s.select()                            # aged low outranks it now
+    assert e.req.rid == 0
+    assert s.effective_priority(e) == 1       # exactly one bucket, capped
+
+
+def _sched_sim(ops, bound):
+    """Drive a Scheduler through (push pri dl | pop) ops, asserting the two
+    documented bounds at every step.  Returns the pop order."""
+    s = Scheduler(starvation_bound=bound)
+    pushes = 0
+    earlier = {}                              # rid -> pushes before it
+    pri_of = {}
+    popped = []
+    for op in ops:
+        if op[0] == "push":
+            rid = pushes
+            earlier[rid] = len(s._queue)
+            pri_of[rid] = op[1]
+            s.push(_req(rid, pri=op[1], dl=op[2]))
+            pushes += 1
+        else:
+            e = s.select()
+            if e is None:
+                continue
+            # priority inversion never exceeds one bucket: nothing still
+            # queued outranks the admitted request by 2+ classes
+            for other in s._queue:
+                if other is not e:
+                    assert other.req.priority - e.req.priority <= 1, \
+                        (other.req.priority, e.req.priority)
+            s.commit(e)
+            popped.append(e)
+    # starvation bound: passed over at most starvation_bound times by
+    # higher-priority work, plus once per earlier-arrived request and once
+    # per strictly-higher-priority arrival (the documented bound)
+    for e in popped:
+        rid = e.req.rid
+        higher = sum(1 for r, p in pri_of.items()
+                     if r != rid and p > pri_of[rid])
+        assert e.passed <= bound + earlier[rid] + higher, \
+            (rid, e.passed, bound, earlier[rid], higher)
+    return [e.req.rid for e in popped]
+
+
+def test_scheduler_bounds_seeded_random():
+    """Always-run spelling of the property test: seeded random op
+    sequences over two adjacent priority classes."""
+    for seed in range(25):
+        rng = random.Random(seed)
+        bound = rng.choice([1, 2, 4, 8])
+        ops = []
+        for _ in range(rng.randint(1, 60)):
+            if rng.random() < 0.6:
+                ops.append(("push", rng.choice([0, 1]),
+                            rng.choice([None, rng.random()])))
+            else:
+                ops.append(("pop",))
+        ops.extend([("pop",)] * 60)           # drain: no one starves
+        _sched_sim(ops, bound)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=80, deadline=None)
+    @given(data=st.data())
+    def test_scheduler_bounds_property(data):
+        """Satellite pin: under random priority/deadline/arrival
+        sequences, no admitted request was ever passed over beyond the
+        documented bound, and priority inversions never exceed one bucket
+        (checked at every pop, with priorities spanning four classes)."""
+        bound = data.draw(st.integers(1, 8), label="bound")
+        two_class = data.draw(st.booleans(), label="two_class")
+        pris = (0, 1) if two_class else (0, 1, 2, 3)
+        ops = data.draw(st.lists(st.one_of(
+            st.tuples(st.just("push"), st.sampled_from(pris),
+                      st.none() | st.floats(0, 100, allow_nan=False)),
+            st.tuples(st.just("pop"))), max_size=80), label="ops")
+        ops = list(ops) + [("pop",)] * 80     # always drain
+        if two_class:
+            _sched_sim(ops, bound)
+        else:
+            # >2 classes: the starvation bound is only documented for
+            # adjacent classes; still assert inversion bound + full drain
+            s = Scheduler(starvation_bound=bound)
+            pushes = 0
+            for op in ops:
+                if op[0] == "push":
+                    s.push(_req(pushes, pri=op[1], dl=op[2]))
+                    pushes += 1
+                else:
+                    e = s.select()
+                    if e is None:
+                        continue
+                    for other in s._queue:
+                        if other is not e:
+                            assert other.req.priority - e.req.priority <= 1
+                    s.commit(e)
+            assert s.pending == 0
+else:
+    @pytest.mark.skip(reason="property tests need hypothesis "
+                      "(pip install hypothesis)")
+    def test_scheduler_bounds_property():
+        pass
+
+
+def test_stall_state_lives_in_scheduler_and_skips_rematch():
+    """Satellite pin: a backpressured submit records its stall in the
+    SCHEDULER (persistent across calls) and a retry with unchanged
+    capacity skips the radix-tree re-walk entirely."""
+    cfg, params = _setup()
+    eng = Engine(cfg, params, EngineConfig(max_batch=2, max_seq=32,
+                                           paged=True, block_size=8,
+                                           num_blocks=4,
+                                           prefix_cache=True))
+    hog = Request(rid=0, prompt=[1, 2, 3, 4, 5], max_new=18)
+    assert eng.submit(hog)                    # 3 blocks: pool now empty
+    calls = []
+    real_match = eng.prefix_cache.match
+
+    def counting_match(*a, **kw):
+        calls.append(1)
+        return real_match(*a, **kw)
+
+    eng.prefix_cache.match = counting_match
+    def is_stalled(req):
+        return eng.scheduler.stalled(
+            req.rid, eng.backend.free_capacity,
+            eng.backend.reservation_need(len(req.prompt), req.max_new))
+
+    blocked = Request(rid=1, prompt=[6, 7, 8], max_new=8)
+    blocked2 = Request(rid=2, prompt=[6, 7, 9], max_new=8)
+    assert not eng.submit(blocked)            # pool short -> stall noted
+    assert len(calls) == 1
+    assert is_stalled(blocked)
+    assert not eng.submit(blocked2)           # a SECOND blocked poller...
+    assert len(calls) == 2
+    assert is_stalled(blocked) and is_stalled(blocked2)
+    assert not eng.submit(blocked)            # capacity unchanged for
+    assert not eng.submit(blocked2)           # BOTH: per-rid stalls
+    assert len(calls) == 2                    # ...no re-walk, no churn
+    # a SMALLER request reusing a stalled rid is not gated by the record
+    small = Request(rid=1, prompt=[9], max_new=1)
+    assert not eng.scheduler.stalled(
+        1, eng.backend.free_capacity,
+        eng.backend.reservation_need(len(small.prompt), small.max_new))
+    _drain(eng)                               # hog finishes, blocks free
+    assert eng.submit(blocked)                # same request now admits
+    assert len(calls) == 3
+    assert not is_stalled(blocked)
+    _drain(eng)
+    assert blocked.done and len(blocked.out) == 8
+
+
+def test_rid_collision_and_done_resubmission_are_explicit():
+    """Review pins: a DIFFERENT request colliding with a live rid raises
+    (instead of returning a truthy handle whose generator spins forever);
+    resubmitting a finished request returns falsy and leaks no callback."""
+    cfg, params = _setup()
+    eng = Engine(cfg, params, EngineConfig(max_batch=2, max_seq=48))
+    a = Request(rid=0, prompt=[1, 2], max_new=8)
+    assert eng.submit(a)
+    with pytest.raises(ValueError, match="in flight"):
+        eng.submit(Request(rid=0, prompt=[3], max_new=2))
+    h_again = eng.submit(a)                   # same OBJECT: idempotent
+    assert h_again and eng.scheduler.pending == 0
+    _drain(eng)
+    assert len(a.out) == 8                    # no duplicated admission
+
+    done_req = Request(rid=5, prompt=[4], max_new=1)
+    assert eng.serve([done_req])["done"]
+    h = eng.submit(done_req, on_token=lambda t: None)
+    assert not h
+    assert not eng._callbacks                 # nothing leaked
+
+
+def test_reentrant_submit_from_on_token_cannot_steal_slot():
+    """Review pin: submit() from inside an on_token callback while the
+    outer admission's slot is not yet recorded reports backpressure
+    instead of stealing the slot."""
+    cfg, params = _setup()
+    eng = Engine(cfg, params, EngineConfig(max_batch=2, max_seq=48))
+    inner = Request(rid=1, prompt=[9, 8], max_new=2)
+    results = []
+
+    def cb(tok):
+        if not results:
+            results.append(eng.submit(inner))
+
+    a = Request(rid=0, prompt=[1, 2, 3], max_new=4)
+    h_a = eng.submit(a, on_token=cb)
+    assert h_a and not results[0]             # inner submit backpressured
+    assert eng.slots[0] is a                  # A kept its slot
+    assert not inner.done and inner.out == []
+    h_inner = eng.submit(inner)               # plain retry admits cleanly
+    assert h_inner
+    _drain(eng)
+    assert a.done and len(a.out) == 4
+    assert inner.done and len(inner.out) == 2
+
+    ref_eng = Engine(cfg, params, EngineConfig(max_batch=1, max_seq=48))
+    ref = Request(rid=0, prompt=[1, 2, 3], max_new=4)
+    assert ref_eng.serve([ref])["done"]
+    assert a.out == ref.out                   # A's stream uncorrupted
+
+
+def test_serve_path_rejects_live_rid_collision():
+    """Review pin: the scheduler admission path enforces the same
+    unique-live-rid rule as submit(), without wedging the engine."""
+    cfg, params = _setup()
+    eng = Engine(cfg, params, EngineConfig(max_batch=2, max_seq=48))
+    a = Request(rid=0, prompt=[1, 2], max_new=20)
+    assert eng.submit(a)
+    clash = Request(rid=0, prompt=[3, 4], max_new=2)
+    with pytest.raises(ValueError, match="in flight"):
+        eng.serve([clash])
+    assert eng.scheduler.pending == 0         # poison entry evicted
+    _drain(eng)
+    assert a.done and len(a.out) == 20        # A unharmed
+    ok = Request(rid=0, prompt=[3, 4], max_new=2)   # rid free again now
+    assert eng.serve([ok])["done"] and len(ok.out) == 2
+
+
+def test_poison_entry_does_not_drop_committed_batch():
+    """Review pin: when a poison scheduler entry raises mid-admission,
+    requests already committed in the same tick are still prefilled (their
+    reserved blocks must not leak and their callers must not hang)."""
+    cfg, params = _setup()
+    eng = Engine(cfg, params, EngineConfig(max_batch=2, max_seq=32,
+                                           paged=True, block_size=8))
+    good = Request(rid=0, prompt=[1, 2, 3], max_new=3)
+    bad = Request(rid=1, prompt=list(range(1, 40)), max_new=2)
+    eng.scheduler.push(good)
+    eng.scheduler.push(bad)
+    with pytest.raises(ValueError):
+        eng.step()
+    assert eng.scheduler.pending == 0
+    assert good.out                           # the committed batch ran
+    _drain(eng)
+    assert good.done and len(good.out) == 3
+    assert eng.allocator.used_blocks == 0     # exact accounting after all
+
+
+def test_no_double_admission_for_queued_request():
+    """Review pin: a request left queued (serve() hit max_ticks) and then
+    admitted directly via submit()/tokens() claims its own queue entry —
+    it can never hold two slots and emit a duplicated stream."""
+    cfg, params = _setup()
+    eng = Engine(cfg, params, EngineConfig(max_batch=2, max_seq=48))
+    req = Request(rid=0, prompt=[1, 2, 3], max_new=4)
+    eng.scheduler.push(req)                   # as serve(max_ticks=0) leaves
+    handle = eng.submit(req)
+    assert handle
+    assert eng.scheduler.pending == 0         # own entry claimed
+    _drain(eng)
+    assert len(req.out) == 4                  # exactly max_new, no dupes
+    assert eng.slots == [None, None]
+
+
+def test_direct_submit_does_not_leapfrog_queued_priority():
+    """Review pin: submit() admissions go through the scheduler's fairness
+    rules — queued equal-or-higher-priority work blocks a direct grab, a
+    strictly-higher direct submit wins but ages the queue."""
+    cfg, params = _setup()
+    eng = Engine(cfg, params, EngineConfig(max_batch=2, max_seq=48))
+    hog = Request(rid=0, prompt=[1, 2], max_new=30)
+    assert eng.submit(hog)                    # slot 0 busy
+    queued_hi = Request(rid=1, prompt=[3, 4], max_new=2, priority=1)
+    eng.scheduler.push(queued_hi)
+    low = Request(rid=2, prompt=[5, 6], max_new=2, priority=0)
+    assert not eng.submit(low)                # free slot, but queue wins
+    assert eng.scheduler.pending == 1
+    hi2 = Request(rid=3, prompt=[7, 8], max_new=2, priority=2)
+    assert eng.submit(hi2)                    # strictly higher: admits...
+    entry = eng.scheduler.select()
+    assert entry.req.rid == 1 and entry.passed == 1   # ...and ages queue
+    _drain(eng, max_ticks=64)
+    assert queued_hi.done and hi2.done
+
+
+def test_priority_admission_order_under_contention():
+    """End-to-end: with one slot and queued mixed priorities, the high
+    class is admitted first — its TTFT ordering is what the bench gates."""
+    cfg, params = _setup()
+    eng = Engine(cfg, params, EngineConfig(max_batch=1, max_seq=48))
+    reqs = [Request(rid=i, prompt=[i + 1, i + 2], max_new=2,
+                    priority=(1 if i % 2 else 0))
+            for i in range(6)]
+    assert eng.serve(reqs)["done"]
+    first_ts = {r.rid: r.token_ts[0] for r in reqs}
+    hi = [first_ts[r.rid] for r in reqs if r.priority == 1]
+    lo = [first_ts[r.rid] for r in reqs if r.priority == 0]
+    assert max(hi) < min(lo)                  # every high admitted first

@@ -136,7 +136,8 @@ def test_trainer_loss_decreases(tmp_path):
                        text=True, cwd=os.path.dirname(os.path.dirname(
                            os.path.abspath(__file__))), timeout=600)
     assert r.returncode == 0, r.stderr[-2000:]
-    hist_line = [l for l in r.stdout.splitlines() if l.startswith("HIST")][0]
+    hist_line = [ln for ln in r.stdout.splitlines()
+                 if ln.startswith("HIST")][0]
     hist = [float(x) for x in hist_line[5:].split(",")]
     assert hist[-1] < hist[0] * 0.9, hist
 
@@ -154,7 +155,8 @@ def test_trainer_restart_resumes(tmp_path):
                         text=True, cwd=root, timeout=600)
     assert r2.returncode == 0, r2.stderr[-2000:]
     assert "resumed from step 12" in r2.stdout, r2.stdout
-    hist = [l for l in r2.stdout.splitlines() if l.startswith("HIST")][0]
+    hist = [ln for ln in r2.stdout.splitlines()
+            if ln.startswith("HIST")][0]
     # resumed run trains only the remaining 8 steps
     assert len(hist[5:].split(",")) == 8
 
