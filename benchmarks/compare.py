@@ -9,8 +9,11 @@ from the current run fail — a silently dropped scenario is how a gate goes
 dark.  The ``prefix`` section additionally carries an ABSOLUTE gate: the
 shared-system-prompt scenario's warm prefill tok/s must beat its own cold
 prefill tok/s (a prefix cache that doesn't out-run recomputation is a
-regression no baseline drift can excuse).  A markdown delta table is
-printed (append to ``$GITHUB_STEP_SUMMARY`` via ``--summary`` in CI).
+regression no baseline drift can excuse).  The ``quant`` section is gated
+on presence: bf16/lut4/int4 decode rows must all report a positive tok/s
+(the frozen-4-bit decode path must never silently drop out of the bench).
+A markdown delta table is printed (append to ``$GITHUB_STEP_SUMMARY`` via
+``--summary`` in CI).
 
 Local repro / baseline refresh:
 
@@ -103,6 +106,27 @@ def check_latency_order(current: dict) -> list[str]:
     return []
 
 
+def check_quant_section(current: dict) -> list[str]:
+    """Absolute presence gate on the ``quant`` section: the frozen-4-bit
+    decode scenario must report a positive decode tok/s for every mode
+    (bf16 baseline + lut4 + int4).  CPU wall-clock ratios between modes are
+    too noisy to gate; what must never happen silently is the quantized
+    decode path dropping out of the bench entirely."""
+    q = current.get("quant")
+    if not q:
+        return ["quant: section missing from the current run "
+                "(quant_decode_modes scenario dropped?)"]
+    fails = []
+    for mode in ("bf16", "lut4", "int4"):
+        row = q.get(mode)
+        tok_s = row.get("decode_tok_s") if isinstance(row, dict) else None
+        if tok_s is None:
+            fails.append(f"quant.{mode}: decode_tok_s missing")
+        elif tok_s <= 0:
+            fails.append(f"quant.{mode}: decode_tok_s {tok_s} not positive")
+    return fails
+
+
 def markdown_table(rows, threshold: float) -> str:
     def fmt(v):
         return "—" if v is None else f"{v:,.1f}"
@@ -138,7 +162,8 @@ def main() -> None:
     rows, regressions, missing = compare(baseline, current, args.threshold)
     prefix_fails = check_prefix_win(current)
     latency_fails = check_latency_order(current)
-    abs_fails = prefix_fails + latency_fails
+    quant_fails = check_quant_section(current)
+    abs_fails = prefix_fails + latency_fails + quant_fails
     table = markdown_table(rows, args.threshold)
     if abs_fails:
         table += "\n" + "\n".join(f"❌ {m}" for m in abs_fails) + "\n"
@@ -153,6 +178,13 @@ def main() -> None:
             table += (f"✅ priority split: high p95 TTFT "
                       f"{lat['high']['ttft_p95_s'] * 1e3:.1f} ms < low "
                       f"{lat['low']['ttft_p95_s'] * 1e3:.1f} ms\n")
+        q = current.get("quant", {})
+        if q:
+            modes = ", ".join(f"{m} {r['decode_tok_s']:.1f}"
+                              for m, r in q.items()
+                              if isinstance(r, dict)
+                              and "decode_tok_s" in r)
+            table += f"✅ quant decode tok/s: {modes}\n"
     print(table)
     if args.summary:
         with open(args.summary, "a") as f:

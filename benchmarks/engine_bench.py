@@ -27,15 +27,21 @@ DEF_BATCHES = (1, 8, 32)
 
 def _build(quant: str, max_batch: int, max_seq: int, arch: str = "yi-9b",
            **engine_kw):
+    """``quant`` routes like the CLIs: ``lut4``/``int4`` become
+    ``EngineConfig.quant`` (frozen 4-bit decode weights through the D&C LUT
+    gemm); any other non-bf16 spelling is a model-level ``QuantConfig``
+    mode (dynamic, every projection)."""
     import jax
 
     from repro.core.layers import QuantConfig
     from repro.models.registry import get_config, get_model
-    from repro.serve.config import EngineConfig
+    from repro.serve.config import ENGINE_QUANT_MODES, EngineConfig
     from repro.serve.engine import Engine
 
     cfg = get_config(arch).reduced()
-    if quant != "bf16":
+    if quant in ENGINE_QUANT_MODES:
+        engine_kw["quant"] = quant
+    elif quant != "bf16":
         from dataclasses import replace
         cfg = replace(cfg, quant=QuantConfig(mode=quant))
     model = get_model(cfg)
@@ -106,6 +112,31 @@ def decode_paged_vs_dense(quant: str = "bf16", batch: int = 8,
     print(f"engine_decode_paged_vs_dense_b{batch},0,"
           f"tok_s_ratio={ratio:.2f}")
     return {"dense": rows["dense"], "paged": rows["paged"], "ratio": ratio}
+
+
+def quant_decode_modes(batch: int = 4, ticks: int = 12, max_seq: int = 64,
+                       modes=("bf16", "lut4", "int4")) -> dict:
+    """Steady-state decode tok/s per weight-quantization mode, same
+    scenario (the ``quant`` section of ``BENCH_engine.json``).
+
+    ``bf16`` is the dense baseline; ``lut4`` evaluates frozen 4-bit codes
+    through the D&C sub-table LUT gemm; ``int4`` direct-dequants the same
+    codes (identical tokens, conventional evaluation).  Decode is
+    memory-bound on real accelerators, so 4-bit weights approach a direct
+    tok/s win there; CPU-interpreted numbers only track relative shape.
+    """
+    rows = {}
+    for mode in modes:
+        cfg, eng = _build(mode, batch, max_seq)
+        tok_s = _steady_decode_tok_s(eng, cfg, batch, ticks, max_seq)
+        rows[mode] = {"decode_tok_s": tok_s}
+        print(f"engine_quant_{mode}_b{batch},{batch / max(tok_s, 1e-9) * 1e6:.0f},"
+              f"tok_s={tok_s:.1f};ticks={ticks}")
+    for mode in modes[1:]:
+        ratio = rows[mode]["decode_tok_s"] / max(
+            rows["bf16"]["decode_tok_s"], 1e-9)
+        print(f"engine_quant_{mode}_vs_bf16,0,tok_s_ratio={ratio:.2f}")
+    return rows
 
 
 def prefill_batched_vs_per_row(quant: str = "bf16", batch: int = 8,
@@ -362,16 +393,19 @@ def bench_json(path: str = "BENCH_engine.json", batches=DEF_BATCHES,
     long-prompt-interleave mix under chunked prefill (the hybrid with paged
     attention pools) — a ``prefix`` section — the shared-system-prompt
     scenario, whose warm-vs-cold prefill win ``benchmarks/compare.py``
-    additionally gates in CI — and a ``latency`` section — per-priority
-    TTFT/ITL p50/p95 from the mixed-load scenario, gated on
-    high-priority p95 TTFT beating low.
+    additionally gates in CI — a ``latency`` section — per-priority
+    TTFT/ITL p50/p95 from the mixed-load scenario, gated on high-priority
+    p95 TTFT beating low — and a ``quant`` section — decode tok/s for
+    bf16 vs the frozen-4-bit lut4/int4 decode paths on one scenario,
+    whose presence (all three rows) ``compare.py`` also gates.
     """
     import numpy as np
 
     from repro.serve.engine import Request
 
-    out = {"quant": quant, "max_seq": max_seq, "ticks": ticks,
-           "per_batch": {}, "recurrent": {}, "prefix": {}, "latency": {}}
+    out = {"model_quant": quant, "max_seq": max_seq, "ticks": ticks,
+           "per_batch": {}, "recurrent": {}, "prefix": {}, "latency": {},
+           "quant": {}}
     for mb in batches:
         cfg, eng = _build(quant, mb, max_seq)
         decode_tok_s = _steady_decode_tok_s(eng, cfg, mb, ticks, max_seq)
@@ -416,6 +450,7 @@ def bench_json(path: str = "BENCH_engine.json", batches=DEF_BATCHES,
               f"chunks={stats['prefill_chunks']}")
     out["prefix"] = prefix_shared_system_prompt(quant=quant)
     out["latency"] = priority_mixed_load(quant=quant)
+    out["quant"] = quant_decode_modes(batch=4, ticks=ticks, max_seq=max_seq)
     with open(path, "w") as f:
         json.dump(out, f, indent=2)
     print(f"engine_json,0,wrote={path}")
@@ -436,13 +471,14 @@ def smoke() -> None:
 
 ALL = [decode_throughput, decode_paged_vs_dense, prefill_batched_vs_per_row,
        long_prompt_interleave, recurrent_long_prompt_interleave,
-       prefix_shared_system_prompt, priority_mixed_load]
+       prefix_shared_system_prompt, priority_mixed_load, quant_decode_modes]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quant", default="bf16",
-                    help="bf16 or a luna_* mode (e.g. luna_approx)")
+                    help="bf16, lut4/int4 (engine-level frozen decode "
+                         "weights) or a model-level mode (e.g. luna_approx)")
     ap.add_argument("--batches", type=int, nargs="+",
                     default=list(DEF_BATCHES))
     ap.add_argument("--ticks", type=int, default=24)

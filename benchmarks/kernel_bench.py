@@ -52,6 +52,43 @@ def lut_gemm_bench(m=128, k=256, n=128) -> dict:
     return {"us": us}
 
 
+def lut_gemm_vs_dense_sweep(shapes=((8, 256, 512), (8, 512, 512),
+                                    (128, 256, 512))) -> dict:
+    """Decode-shape sweep: dense jnp.dot vs the D&C sub-table LUT gemm vs
+    the full-codebook kernel (6 vs 15 selects per tile — the paper's ~3.7x
+    LUT-area split at the GEMM level).
+
+    The jnp D&C path is what the serving engine runs on the decode hot
+    path (``EngineConfig(quant="lut4")``); the Pallas kernels are timed in
+    interpret mode, so their numbers track structure (weight bytes moved:
+    4-bit codes vs 16-bit floats), not real TPU wall-clock.
+    """
+    from repro.core.quant import quantize_weight
+    from repro.kernels.lut_gemm.ops import (lut4_matmul_kernel,
+                                            nf4_matmul_kernel,
+                                            quantized_matmul)
+    rng = np.random.default_rng(1)
+    out = {}
+    for m, k, n in shapes:
+        x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+        qw = quantize_weight(w, "lut_dc")
+        us_dense = _bench(lambda: x @ w)
+        us_jnp = _bench(lambda: quantized_matmul(x, qw))
+        us_dc = _bench(lambda: lut4_matmul_kernel(x, w, interpret=True))
+        us_full = _bench(lambda: nf4_matmul_kernel(x, w, interpret=True))
+        wbytes_dense = k * n * 2                       # bf16 weights
+        wbytes_lut = k * n // 2 + n * 8                # 4-bit codes + scales
+        tag = f"m{m}_k{k}_n{n}"
+        out[tag] = {"dense_us": us_dense, "lut_dc_jnp_us": us_jnp,
+                    "lut_dc_pallas_us": us_dc, "lut_full_pallas_us": us_full}
+        print(f"lut_gemm_sweep_{tag},{us_jnp:.0f},dense_us={us_dense:.0f};"
+              f"dc_pallas_us={us_dc:.0f};full_pallas_us={us_full:.0f};"
+              f"weight_bytes={wbytes_lut}_vs_{wbytes_dense};"
+              f"selects=6_vs_15")
+    return out
+
+
 def flash_bench(s=1024, h=4, d=64) -> dict:
     from repro.kernels.flash_attention.ops import mha
     rng = np.random.default_rng(2)
@@ -87,4 +124,5 @@ def quant_model_bench() -> dict:
     return rows
 
 
-ALL = [luna_mm_modes, lut_gemm_bench, flash_bench, quant_model_bench]
+ALL = [luna_mm_modes, lut_gemm_bench, lut_gemm_vs_dense_sweep, flash_bench,
+       quant_model_bench]

@@ -2,15 +2,27 @@
 multiplier mode (QAT via STE) and compare final task MAE — the paper's
 "separate neural networks for each method" experiment.
 
+Extended with the serving-side PTQ column: the bf16-trained ("ideal") net
+re-evaluated with its weights frozen to 4-bit ``QuantizedWeight`` leaves —
+exactly what ``EngineConfig(quant="lut4"|"int4")`` does to decode
+projections.  Both evaluation strategies (D&C sub-table LUT vs direct
+dequant) reconstruct the same affine grid, so their MAE is identical; the
+documented accuracy bound (see docs/quantization.md) is
+``MAE(ptq) <= PTQ_MAE_BOUND * MAE(ideal)``.
+
 Run:  PYTHONPATH=src python examples/fig13_nn_accuracy.py
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.quant import ste_luna_matmul
+from repro.core.quant import quantize_weight, ste_luna_matmul
+from repro.kernels.lut_gemm.ops import quantized_matmul
 
 MODES = ["ideal", "opt_dc", "approx_dc2", "approx_dc"]
+
+#: documented PTQ accuracy bound: frozen-4-bit MAE vs the bf16-trained MAE
+PTQ_MAE_BOUND = 1.25
 
 
 def make_data(n=512, d=8, seed=0):
@@ -48,17 +60,36 @@ def train_one(mode, steps=300, lr=3e-2):
     for _ in range(steps):
         params, loss = step(params)
     mae = float(jnp.abs(mlp_fwd(params, x, mode) - y).mean())
-    return mae
+    return mae, params
+
+
+def ptq_mae(params, kernel="lut_dc"):
+    """MAE of the bf16-trained net with weights frozen to 4-bit codes —
+    the serving engine's ``quant="lut4"`` / ``"int4"`` transform."""
+    x, y = make_data()
+    q1 = quantize_weight(params["w1"], kernel)
+    q2 = quantize_weight(params["w2"], kernel)
+    h = jnp.tanh(quantized_matmul(x, q1) + params["b1"])
+    out = quantized_matmul(h, q2) + params["b2"]
+    return float(jnp.abs(out - y).mean())
 
 
 def main():
     print("mode,final_MAE  (paper Fig 13: exact < ApproxD&C2 < ApproxD&C)")
     results = {}
+    trained = {}
     for mode in MODES:
-        mae = train_one(mode)
+        mae, params = train_one(mode)
         results[mode] = mae
+        trained[mode] = params
         print(f"  {mode:>10}: MAE {mae:.4f}")
+    for kernel, label in (("lut_dc", "ptq_lut4"), ("dequant", "ptq_int4")):
+        results[label] = ptq_mae(trained["ideal"], kernel)
+        print(f"  {label:>10}: MAE {results[label]:.4f}")
     assert results["ideal"] <= results["approx_dc"] * 1.2
+    assert results["ptq_lut4"] <= results["ideal"] * PTQ_MAE_BOUND, \
+        (results["ptq_lut4"], results["ideal"])
+    assert results["ptq_lut4"] == results["ptq_int4"]   # same affine grid
     return results
 
 

@@ -4,7 +4,11 @@
    transient-sim re-enactment: W=0110 x Y sequence);
 2. hardware cost/energy/area model (Tables I/II, Figs 15/16/18);
 3. a real matmul through the Pallas LUNA kernel;
-4. a LunaDense-quantized transformer forward pass.
+4. a LunaDense-quantized transformer forward pass (model-level
+   ``QuantConfig`` — dynamic quantization of every projection);
+5. the serving engine with ``EngineConfig(quant="lut4")`` — 4-bit decode
+   weights evaluated through the paper's D&C sub-table LUT gemm (the
+   ``--quant lut4`` flag on both serving CLIs).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -76,4 +80,25 @@ for mode in ("bf16", "luna_dc", "luna_approx"):
     toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 32)))
     loss, _ = model.loss(params, {"tokens": toks, "labels": toks})
     print(f"  quant={mode:>12}: loss {float(loss):.4f}")
+
+print()
+print("=" * 66)
+print('5. Serving with EngineConfig(quant="lut4"): 4-bit decode weights')
+print("=" * 66)
+from repro.serve.config import EngineConfig  # noqa: E402
+from repro.serve.engine import Engine, Request  # noqa: E402
+
+cfg = get_config("yi-9b").reduced(dtype="float32")
+model = get_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+for quant in (None, "lut4"):
+    engine = Engine(cfg, params,
+                    EngineConfig(max_batch=2, max_seq=48, quant=quant))
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size, 5).tolist(),
+                    max_new=6)
+            for i in range(2)]
+    stats = engine.serve(reqs)
+    print(f"  quant={str(quant):>5}: {stats['decode_tokens']} decode tok, "
+          f"outputs {[r.out[:3] for r in reqs]}")
 print("\nDone.")

@@ -7,8 +7,15 @@ mixed-depth continuous-batching decode with every projection in the chosen
 LUNA mode.  This example also shows the v2 request lifecycle: one request
 is streamed token-by-token through its ``RequestHandle``.
 
+``--quant`` is the shared flag registered by ``EngineConfig.add_cli_args``:
+``lut4``/``int4`` freeze 4-bit decode weights on the engine (the paper's
+D&C sub-table LUT gemm on the decode hot path); any other spelling
+(``luna_*``, ``int8``, ``lut_nf4``, ``bf16``) is a model-level
+``QuantConfig`` mode applied dynamically to every projection.
+
 Run:  PYTHONPATH=src python examples/serve_luna.py --quant luna_approx2 \
           --sampling top_k --top-k 20
+      PYTHONPATH=src python examples/serve_luna.py --quant lut4
 """
 import argparse
 import os
@@ -20,20 +27,21 @@ import numpy as np  # noqa: E402
 
 from repro.core.layers import QuantConfig  # noqa: E402
 from repro.models.registry import get_config, get_model  # noqa: E402
-from repro.serve.config import EngineConfig  # noqa: E402
+from repro.serve.config import ENGINE_QUANT_MODES, EngineConfig  # noqa: E402
 from repro.serve.engine import Engine, Request  # noqa: E402
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--quant", default="luna_approx")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=12)
     EngineConfig.add_cli_args(ap)
-    ap.set_defaults(max_batch=4, max_seq=96)
+    ap.set_defaults(max_batch=4, max_seq=96, quant="luna_approx")
     args = ap.parse_args()
 
-    cfg = get_config("yi-9b").reduced(quant=QuantConfig(mode=args.quant))
+    model_mode = (args.quant if args.quant not in ENGINE_QUANT_MODES
+                  else "bf16")
+    cfg = get_config("yi-9b").reduced(quant=QuantConfig(mode=model_mode))
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     engine = Engine(cfg, params, EngineConfig.from_args(args))

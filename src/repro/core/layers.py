@@ -26,7 +26,8 @@ import jax.numpy as jnp
 
 from repro.core import lut
 from repro.core.luna import LunaMode
-from repro.core.quant import calibrate, dequantize, quantize, ste_luna_matmul
+from repro.core.quant import (QuantizedWeight, calibrate, dequantize,
+                              quantize, ste_luna_matmul)
 
 LUNA_MODE_OF = {
     "luna_conventional": LunaMode.CONVENTIONAL,
@@ -86,7 +87,16 @@ def quant_matmul(x: jax.Array, w: jax.Array, cfg: QuantConfig | None,
     """``x @ w`` under the configured quantization mode.
 
     ``x``: (..., K); ``w``: (K, N).  Output dtype follows ``x``.
+
+    ``w`` may also be a frozen :class:`~repro.core.quant.QuantizedWeight`
+    (the engine's ``EngineConfig(quant=...)`` decode path substitutes them
+    at construction); those route through the D&C LUT GEMM regardless of
+    ``cfg`` — the model-level ``cfg`` quantizes *dynamically* per call,
+    engine-level quantization froze the weight once.
     """
+    if isinstance(w, QuantizedWeight):
+        from repro.kernels.lut_gemm import ops as lut_ops  # lazy: avoid cycle
+        return lut_ops.quantized_matmul(x, w)
     if cfg is None or not cfg.applies(group):
         return x @ w
     if cfg.mode == "int8":

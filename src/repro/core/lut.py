@@ -67,3 +67,30 @@ def mux_count(table_size: int, out_bits: int) -> int:
 def codebook_dequant(codes: jax.Array, codebook: jax.Array) -> jax.Array:
     """Dequantize integer codes through an arbitrary codebook via mux tree."""
     return mux_tree_select(codebook.reshape(-1, *([1] * codes.ndim)), codes)
+
+
+def dc_decompose_codebook(codebook: jax.Array, digit_bits: int = 2
+                          ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Least-squares additive D&C split of a ``2**(2*digit_bits)``-entry LUT.
+
+    The paper's Figs 2/3 decompose the 4-bit multiply LUT into two 2-bit
+    sub-tables summed after selection: ``T[q] ~= HI[q >> digit_bits] +
+    LO[q & (2**digit_bits - 1)]``.  For any *affine* codebook (uniform
+    int4) the split is exact; for non-linear tables (NF4) this returns the
+    least-squares-optimal additive pair (row/column means of the table
+    viewed as a ``(2**digit_bits, 2**digit_bits)`` grid, grand mean folded
+    into HI) plus the per-entry residual — the price of evaluating a
+    programmable LUT with ``2 * (2**digit_bits - 1)`` muxes instead of
+    ``2**(2*digit_bits) - 1`` (6 vs 15: the select tree behind the paper's
+    ~3.7x area figure).
+
+    Returns ``(hi_tab, lo_tab, residual)`` with ``hi_tab``/``lo_tab`` of
+    shape ``(2**digit_bits,)`` and ``residual`` of ``codebook.shape``.
+    """
+    d = 1 << digit_bits
+    grid = jnp.asarray(codebook, jnp.float32).reshape(d, d)  # [hi, lo]
+    mean = jnp.mean(grid)
+    hi_tab = jnp.mean(grid, axis=1)               # row means (grand mean kept)
+    lo_tab = jnp.mean(grid, axis=0) - mean        # column means, centered
+    residual = (grid - hi_tab[:, None] - lo_tab[None, :]).reshape(-1)
+    return hi_tab, lo_tab, residual

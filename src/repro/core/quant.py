@@ -15,10 +15,22 @@ product from the code-space LUNA accumulation::
 where ``L`` is ``luna_matmul`` in any mode.  For approx modes the paper's
 code-space error flows through the same identity scaled by ``s_x s_w`` —
 which is exactly how the paper's Fig 13 NN-level MAE arises.
+
+Serving-side weight-only quantization (this module's second half) applies
+the same algebra statically: :class:`QuantizedWeight` freezes a projection
+into 4-bit codes + per-channel :class:`QParams` at engine construction, and
+:func:`quantize_decode_params` walks a model param tree replacing every
+decode-projection leaf.  The D&C sub-tables stored alongside the codes are
+the paper's Fig 2/3 decomposition of the 16-entry code LUT: a 4-bit code
+``q`` splits into 2-bit digits ``q = 4*q_hi + q_lo``, so the 16-entry table
+is evaluated as the sum of two 4-entry sub-tables (``HI[i] = 4i``,
+``LO[j] = j``) — 2 × (2**2 − 1) = 6 mux selects instead of 15, the select
+cost behind the paper's ~3.7× area saving.
 """
 from __future__ import annotations
 
 import functools
+from dataclasses import dataclass
 from typing import NamedTuple
 
 import jax
@@ -124,3 +136,118 @@ def _ste_bwd(mode, bits, res, g):
 
 
 ste_luna_matmul.defvjp(_ste_fwd, _ste_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Serving-side weight-only quantization: frozen 4-bit decode weights.
+# ---------------------------------------------------------------------------
+
+#: evaluation strategies for a frozen 4-bit weight (EngineConfig(quant=...)):
+#: "lut_dc" sums the paper's two 2-bit D&C sub-tables through the mux tree;
+#: "dequant" is the conventional-math baseline (direct affine dequant).
+#: Both reconstruct the identical affine grid — tokens match bit-for-bit.
+WEIGHT_KERNELS = ("lut_dc", "dequant")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class QuantizedWeight:
+    """A projection weight frozen to unsigned 4-bit codes (paper Sec. III).
+
+    ``codes``: (..., K, N) int8 codes in [0, 16); ``scale``/``zero_point``:
+    (..., N) per-output-channel affine params from :func:`calibrate`;
+    ``hi_tab``/``lo_tab``: (..., 4) D&C sub-tables in code space
+    (``q = hi_tab[q >> 2] + lo_tab[q & 3]`` exactly — the Fig 2/3 split of
+    the 16-entry LUT into two 4-entry tables).  ``kernel`` is static pytree
+    aux data selecting the evaluation strategy (see ``WEIGHT_KERNELS``).
+
+    Registered as a pytree so a stacked instance (leading layer axis on
+    every array child) slices cleanly under ``jax.lax.scan`` and traces
+    through ``jax.jit`` like any other param leaf.
+    """
+    codes: jax.Array
+    scale: jax.Array
+    zero_point: jax.Array
+    hi_tab: jax.Array
+    lo_tab: jax.Array
+    kernel: str = "lut_dc"
+
+    def tree_flatten(self):
+        return ((self.codes, self.scale, self.zero_point,
+                 self.hi_tab, self.lo_tab), self.kernel)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, kernel=aux)
+
+    @property
+    def qparams(self) -> QParams:
+        return QParams(self.scale, self.zero_point, 4)
+
+
+def quantize_weight(w: jax.Array, kernel: str = "lut_dc") -> QuantizedWeight:
+    """Freeze a (…, K, N) float weight to a :class:`QuantizedWeight`.
+
+    Per-output-channel affine calibration over the K axis (the paper's
+    operands are unsigned codes; see the module docstring identity).  Leaves
+    with extra leading axes (scan-stacked layers) are quantized per-slice by
+    vmapping, so every array child carries the same leading axes and the
+    container remains ``jax.lax.scan``-sliceable.
+    """
+    if kernel not in WEIGHT_KERNELS:
+        raise ValueError(f"unknown weight kernel {kernel!r}; "
+                         f"one of {WEIGHT_KERNELS}")
+    if w.ndim > 2:
+        return jax.vmap(lambda wi: quantize_weight(wi, kernel))(w)
+    wf = w.astype(jnp.float32)
+    qp = calibrate(wf, bits=4, axis=-1)
+    codes = quantize(wf, qp).astype(jnp.int8)
+    # D&C sub-tables (code space): q = HI[q>>2] + LO[q&3], HI[i]=4i, LO[j]=j.
+    hi_tab = (4.0 * jnp.arange(4, dtype=jnp.float32))
+    lo_tab = jnp.arange(4, dtype=jnp.float32)
+    return QuantizedWeight(codes, qp.scale, qp.zero_point,
+                           hi_tab, lo_tab, kernel=kernel)
+
+
+#: decode-projection leaf names eligible for engine-level quantization.
+#: Everything here is consumed through ``core.layers.quant_matmul``; leaves
+#: used directly (MLA's w_uk/w_uv reshapes, MoE routed-expert einsums,
+#: routers, norms, embeddings, lm_head) are deliberately absent.
+DECODE_QUANT_TARGETS = frozenset({
+    "wq", "wk", "wv", "wo", "w_dq", "w_uq", "w_dkv",      # attention
+    "w_up", "w_gate", "w_down",                            # mlp / shared moe
+    "w_in", "w_out",                                       # mamba2 mixer
+})
+
+#: dict keys whose subtrees hold quant_matmul-consumed projections.  MoE
+#: routed experts live directly under "moe" (stacked (E, ...) einsum
+#: operands sharing the mlp leaf NAMES) — only the "shared" expert subtree
+#: routes through quant_matmul, so parent-key scoping is load-bearing.
+_QUANT_PARENT_KEYS = frozenset({"attn", "mlp", "m", "shared"})
+
+
+def quantize_decode_params(params, quant: str):
+    """Walk a model param tree, freezing every decode projection to 4-bit.
+
+    ``quant``: ``"lut4"`` (D&C sub-table LUT evaluation) or ``"int4"``
+    (direct-dequant baseline).  A leaf is quantized iff its dict key is in
+    ``DECODE_QUANT_TARGETS``, some ancestor key is in the quant-parent set,
+    and it is a float matrix — everything else (norms, embeddings, routers,
+    MoE routed experts, MLA w_uk/w_uv) passes through untouched.
+    """
+    kernel = {"lut4": "lut_dc", "int4": "dequant"}[quant]
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            return {k: walk(v, path + (k,)) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            sub = [walk(v, path) for v in node]
+            return type(node)(sub)
+        if (path and path[-1] in DECODE_QUANT_TARGETS
+                and any(p in _QUANT_PARENT_KEYS for p in path[:-1])
+                and hasattr(node, "ndim") and node.ndim >= 2
+                and jnp.issubdtype(node.dtype, jnp.floating)):
+            return quantize_weight(node, kernel)
+        return node
+
+    return walk(params, ())

@@ -1,4 +1,21 @@
-"""Public wrappers: codebook quantize + LUT GEMM (weight-only 4-bit)."""
+"""Public wrappers: codebook quantize + LUT GEMM (weight-only 4-bit).
+
+Three entry points over the LUT kernels:
+
+* :func:`nf4_matmul_kernel` — NF4 codebook weights through the full-table
+  Pallas kernel (paper Fig 1 select tree, programmable codebook).
+* :func:`lut4_matmul_kernel` — uniform-int4 weights through the D&C
+  sub-table Pallas kernel (paper Figs 2/3: two 4-entry tables, 6 selects).
+* :func:`quantized_matmul` — the serving decode hot path: a frozen
+  :class:`~repro.core.quant.QuantizedWeight` evaluated with jnp primitives
+  (jit-compatible on every backend; the Pallas kernels above implement the
+  same math for TPU).  Dispatches on the container's static ``kernel`` tag:
+  ``"lut_dc"`` reconstructs the weight by summing the two D&C sub-table
+  selects through ``core.lut.mux_tree_select`` (3 + 3 muxes — the paper's
+  area argument); ``"dequant"`` is the conventional-math baseline
+  ``(q - z_w) * s_w``.  Both reconstruct the identical affine grid, so
+  engine tokens match bit-for-bit between ``quant="lut4"`` and ``"int4"``.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,8 +23,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.lut import NF4_CODEBOOK
-from repro.kernels.lut_gemm.lut_gemm import lut_gemm
+from repro.core.lut import NF4_CODEBOOK, codebook_dequant
+from repro.core.quant import QuantizedWeight, dequantize, quantize_weight
+from repro.kernels.lut_gemm.lut_gemm import lut_gemm, lut_gemm_dc
 
 
 def codebook_quantize(w: jax.Array, codebook: jax.Array
@@ -17,6 +35,25 @@ def codebook_quantize(w: jax.Array, codebook: jax.Array
     wn = w / scale
     codes = jnp.argmin(jnp.abs(wn[..., None] - codebook), axis=-1)
     return codes.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def quantized_matmul(x: jax.Array, qw: QuantizedWeight) -> jax.Array:
+    """``x @ dequant(qw)`` — the engine's quantized decode-step matmul.
+
+    ``x``: (..., K) float; ``qw.codes``: (K, N) (scan-stacked leaves are
+    sliced to 2-D before reaching here).  Output dtype follows ``x``.
+    """
+    assert qw.codes.ndim == 2, (
+        f"quantized_matmul expects a sliced 2-D weight, got "
+        f"{qw.codes.shape}; scan-stacked leaves are sliced by lax.scan")
+    q = qw.codes.astype(jnp.int32)
+    if qw.kernel == "lut_dc":
+        w_q = (codebook_dequant(q >> 2, qw.hi_tab)
+               + codebook_dequant(q & 3, qw.lo_tab))
+        w = (w_q - qw.zero_point[None, :]) * qw.scale[None, :]
+    else:                                   # "dequant": conventional math
+        w = dequantize(q, qw.qparams)
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -34,6 +71,30 @@ def nf4_matmul_kernel(x: jax.Array, w: jax.Array,
     cp = jnp.pad(codes, [(0, (-k) % bk), (0, (-n) % bn)])
     sp = jnp.pad(scale, [(0, (-n) % bn)])
     out = lut_gemm(xp, cp, cb, sp, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lut4_matmul_kernel(x: jax.Array, w: jax.Array,
+                       interpret: bool = True) -> jax.Array:
+    """Float GEMM with uniform-int4 weights through the D&C Pallas kernel.
+
+    Quantizes ``w`` with :func:`~repro.core.quant.quantize_weight` (the same
+    calibration the engine freezes at construction) and evaluates through
+    the six-select sub-table kernel.  Pads every dim to the fitted block.
+    """
+    qw = quantize_weight(w, kernel="lut_dc")
+    m, k = x.shape
+    n = w.shape[1]
+    bm = _fit(m)
+    bn = _fit(n)
+    bk = _fit(k)
+    xp = jnp.pad(x, [(0, (-m) % bm), (0, (-k) % bk)])
+    cp = jnp.pad(qw.codes, [(0, (-k) % bk), (0, (-n) % bn)])
+    zp = jnp.pad(qw.zero_point, [(0, (-n) % bn)])
+    sp = jnp.pad(qw.scale, [(0, (-n) % bn)])
+    out = lut_gemm_dc(xp, cp, qw.hi_tab, qw.lo_tab, zp, sp,
+                      bm=bm, bn=bn, bk=bk, interpret=interpret)
     return out[:m, :n]
 
 

@@ -3,9 +3,15 @@
   PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --reduced \
       --quant luna_approx --requests 8 --sampling top_k --top-k 40
 
+  # LUT-quantized decode hot path (engine-level, D&C sub-table gemm):
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --quant lut4
+
 Engine knobs are single-sourced in ``repro.serve.config.EngineConfig`` —
-``EngineConfig.add_cli_args`` registers the flags, ``from_args`` builds the
-validated config.
+``EngineConfig.add_cli_args`` registers the flags (including the shared
+``--quant``), ``from_args`` builds the validated config.  ``--quant
+lut4|int4`` freezes 4-bit decode weights on the engine; any other spelling
+(bf16, int8, luna_*, ...) is a model-level mode applied to every
+projection dynamically.
 """
 from __future__ import annotations
 
@@ -13,16 +19,15 @@ import argparse
 
 
 def main():
-    from repro.serve.config import EngineConfig
+    from repro.serve.config import ENGINE_QUANT_MODES, EngineConfig
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-9b")
     ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--quant", default="bf16")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     EngineConfig.add_cli_args(ap)
-    ap.set_defaults(max_batch=4, max_seq=128)
+    ap.set_defaults(max_batch=4, max_seq=128, quant="bf16")
     args = ap.parse_args()
 
     import jax
@@ -35,7 +40,7 @@ def main():
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    if args.quant != "bf16":
+    if args.quant not in ("bf16", *ENGINE_QUANT_MODES):
         from dataclasses import replace
         cfg = replace(cfg, quant=QuantConfig(mode=args.quant))
 

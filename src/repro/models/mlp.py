@@ -1,4 +1,12 @@
-"""Feed-forward blocks: SwiGLU (llama family) and GELU (starcoder2/whisper)."""
+"""Feed-forward blocks: SwiGLU (llama family) and GELU (starcoder2/whisper).
+
+Every projection (``w_up``/``w_gate``/``w_down``) routes through
+``core.layers.quant_matmul``, so these leaves participate in BOTH
+quantization surfaces: model-level ``QuantConfig`` (dynamic, every call)
+and engine-level ``EngineConfig(quant="lut4"|"int4")``, where the serving
+backend freezes them to 4-bit ``QuantizedWeight`` containers for the
+decode hot path (prefill keeps the float tree).
+"""
 from __future__ import annotations
 
 import jax

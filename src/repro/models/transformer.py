@@ -243,7 +243,13 @@ class TransformerLM:
         """token: (B, 1) int32; index: scalar int32 position shared by all
         rows, or a (B,) int32 array of per-row positions (mixed-depth
         continuous batching).  ``tables``: (B, nblk) int32 block tables
-        when ``state`` holds paged pools (see ``init_cache``)."""
+        when ``state`` holds paged pools (see ``init_cache``).
+
+        ``params`` may be the engine's frozen 4-bit decode tree
+        (``EngineConfig(quant=...)``): attention/MLP projection leaves are
+        then ``QuantizedWeight`` containers that ``quant_matmul`` routes
+        through the D&C LUT gemm — scan-stacked leaves slice per layer
+        like any float leaf (registered pytree with a leading L axis)."""
         hidden, _, new_caches = self.forward(
             params, token, caches=state, cache_index=index,
             block_tables=tables)

@@ -145,6 +145,25 @@ class CacheBackend:
         return jax.tree.map(one, staging, caches, self._batch_axes,
                             self._pool_leaves)
 
+    # --- decode weights (backend-owned quantized state) -----------------
+    def prepare_decode_params(self, params, quant: str | None):
+        """Freeze the decode-step weight tree once at construction.
+
+        ``quant=None`` keeps the caller's tree untouched (decode params ARE
+        the prefill params — the token-identity guarantee).  ``"lut4"`` /
+        ``"int4"`` replace every decode-projection leaf with a 4-bit
+        :class:`~repro.core.quant.QuantizedWeight` (D&C sub-table LUT vs
+        direct-dequant evaluation).  The quantized tree is backend-owned
+        state, like the cache slab: prefill always runs the full-precision
+        tree, only the decode hot path reads this one.
+        """
+        if quant is None:
+            self.decode_params = params
+        else:
+            from repro.core.quant import quantize_decode_params
+            self.decode_params = quantize_decode_params(params, quant)
+        return self.decode_params
+
     # --- host-side reservation ------------------------------------------
     def validate_request(self, rid: int, prompt_len: int,
                          max_new: int) -> None:

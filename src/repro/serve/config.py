@@ -27,6 +27,11 @@ from dataclasses import dataclass, fields, replace
 
 from repro.serve.sampling import SamplingConfig
 
+#: engine-level decode quantization modes (EngineConfig.quant); model-level
+#: modes (bf16/int8/luna_* — dynamic per-call quantization via QuantConfig)
+#: stay on the model config and share the ``--quant`` CLI flag.
+ENGINE_QUANT_MODES = ("lut4", "int4")
+
 
 @dataclass(frozen=True)
 class EngineConfig:
@@ -48,6 +53,12 @@ class EngineConfig:
     * ``starvation_bound`` — scheduler aging threshold: a queued request
       passed over this many times gains one priority bucket (see
       ``repro.serve.engine.Scheduler``).
+    * ``quant`` — decode weight quantization: ``"lut4"`` freezes decode
+      projections to 4-bit codes evaluated through the paper's D&C
+      sub-table LUT GEMM, ``"int4"`` is the direct-dequant baseline
+      (token-identical math, conventional evaluation), ``None`` keeps
+      bf16 decode token-identical to prior releases.  Prefill always runs
+      full precision; see ``docs/quantization.md``.
     """
     max_batch: int = 8
     max_seq: int = 256
@@ -61,8 +72,13 @@ class EngineConfig:
     sampling: SamplingConfig | None = None
     seed: int = 0
     starvation_bound: int = 8
+    quant: str | None = None
 
     def __post_init__(self):
+        if self.quant is not None and self.quant not in ENGINE_QUANT_MODES:
+            raise ValueError(
+                f"quant must be one of {ENGINE_QUANT_MODES} or None, "
+                f"got {self.quant!r}")
         if self.max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
         if self.max_seq < 2:
@@ -144,21 +160,36 @@ class EngineConfig:
         ap.add_argument("--temperature", type=float, default=1.0)
         ap.add_argument("--top-k", type=int, default=40)
         ap.add_argument("--seed", type=int, default=0)
+        ap.add_argument("--quant", default=None,
+                        help="weight quantization: 'lut4' (4-bit decode "
+                             "weights through the D&C sub-table LUT gemm) "
+                             "or 'int4' (direct-dequant baseline) quantize "
+                             "the DECODE hot path at engine construction; "
+                             "any other value (bf16, int8, int4_dequant, "
+                             "lut_nf4, luna_*) is a model-level mode "
+                             "applied dynamically to every projection")
 
     @classmethod
     def from_args(cls, args, **overrides) -> "EngineConfig":
         """Build a config from an argparse namespace produced by
         :meth:`add_cli_args`.  ``overrides`` win over CLI values (a CLI may
         pin e.g. ``max_batch`` instead of exposing the flag); flags the
-        parser left at None fall back to the dataclass defaults."""
+        parser left at None fall back to the dataclass defaults.  The
+        shared ``--quant`` flag reaches ``EngineConfig.quant`` only for
+        engine-level modes — model-level spellings (bf16/luna_*/...) are
+        the caller's to route into a ``QuantConfig`` and leave the engine
+        field at None."""
         cfg = cls()
         vals = {}
         for f in fields(cls):
-            if f.name == "sampling":
+            if f.name in ("sampling", "quant"):
                 continue
             v = getattr(args, f.name, None)
             if v is not None and v is not False:
                 vals[f.name] = v
+        q = getattr(args, "quant", None)
+        if q in ENGINE_QUANT_MODES:
+            vals["quant"] = q
         mode = getattr(args, "sampling", "greedy")
         vals["sampling"] = SamplingConfig(
             mode=mode, temperature=getattr(args, "temperature", 1.0),

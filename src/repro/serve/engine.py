@@ -368,6 +368,13 @@ class Engine:
         elif config is None:
             config = EngineConfig()
         config.validate(cfg.family)
+        if config.quant is not None and getattr(cfg, "quant", None) is not \
+                None and cfg.quant.mode != "bf16":
+            raise ValueError(
+                f"EngineConfig(quant={config.quant!r}) freezes decode "
+                f"weights to 4-bit; combining it with model-level "
+                f"quant mode {cfg.quant.mode!r} would quantize twice — "
+                "pick one")
         self.cfg = cfg
         self.model = get_model(cfg)
         self.params = params
@@ -379,6 +386,11 @@ class Engine:
         self.prefill_chunk = config.prefill_chunk
         self.backend = make_backend(self.model, cfg.family, config)
         self.caches = self.backend.caches
+        # decode weights are backend-owned state: the full-precision tree
+        # itself under quant=None (token-identity), a frozen 4-bit tree
+        # under quant="lut4"/"int4" — prefill always uses self.params
+        self.decode_params = self.backend.prepare_decode_params(
+            params, config.quant)
         self.prefix_cache = None
         if config.prefix_cache:
             self.prefix_cache = PrefixCache(
@@ -973,7 +985,7 @@ class Engine:
                                              self._chunked])
         t0 = time.perf_counter()
         nxt, self.caches = self._decode(
-            self.params, jnp.asarray(toks), self.caches,
+            self.decode_params, jnp.asarray(toks), self.caches,
             jnp.asarray(self.positions), tables, jnp.asarray(rids),
             jnp.asarray(steps), self.key)
         nxt = np.asarray(nxt)

@@ -1,0 +1,260 @@
+"""LUT-quantized decode hot path (EngineConfig(quant=...)).
+
+The load-bearing pins:
+  * quant=None is token-identical to the pre-quant engine (the decode tree
+    IS the prefill tree — same object);
+  * the D&C Pallas kernel, its jnp ref, and the engine's jnp decode path
+    agree bit-for-bit on the same frozen weights;
+  * quant="lut4" and quant="int4" emit identical tokens (two evaluation
+    strategies of one affine grid — the paper's D&C argument);
+  * quantized greedy decode stays within the documented accuracy bound on
+    the fig13 harness, and agrees with bf16 decode above threshold;
+  * quant composes with paged=True + prefix_cache (warm == cold tokens).
+"""
+import importlib.util
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lut import NF4_CODEBOOK, dc_decompose_codebook
+from repro.core.quant import (QuantizedWeight, quantize_decode_params,
+                              quantize_weight)
+from repro.kernels.lut_gemm.ops import lut4_matmul_kernel, quantized_matmul
+from repro.kernels.lut_gemm.ref import lut_gemm_dc_ref
+from repro.models.registry import get_config, get_model
+from repro.serve.config import EngineConfig
+from repro.serve.engine import Engine, Request
+
+MIXED_LENS = (3, 9, 5)
+
+
+def _setup(arch="yi-9b", **over):
+    cfg = get_config(arch).reduced(dtype="float32", attn_impl="full", **over)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    return cfg, params
+
+
+def _prompts(cfg, lens=MIXED_LENS, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab_size, n).tolist() for n in lens]
+
+
+def _serve(cfg, params, prompts, max_new=8, **conf):
+    eng = Engine(cfg, params,
+                 EngineConfig(max_batch=len(prompts), max_seq=48, **conf))
+    reqs = [Request(rid=i, prompt=p, max_new=max_new)
+            for i, p in enumerate(prompts)]
+    assert eng.serve(reqs)["done"]
+    return [r.out for r in reqs], eng
+
+
+# ---------------------------------------------------------------------------
+# quant=None token identity
+# ---------------------------------------------------------------------------
+
+def test_quant_none_is_token_identical_and_aliases_params():
+    """Acceptance pin: the default engine and an explicit quant=None engine
+    emit the same tokens, and the decode tree IS the param tree (no copy,
+    no transform — the strongest possible identity guarantee)."""
+    cfg, params = _setup()
+    prompts = _prompts(cfg)
+    base, eng_default = _serve(cfg, params, prompts)
+    none, eng_none = _serve(cfg, params, prompts, quant=None)
+    assert base == none
+    assert eng_default.decode_params is eng_default.params
+    assert eng_none.decode_params is eng_none.params
+
+
+# ---------------------------------------------------------------------------
+# kernel parity
+# ---------------------------------------------------------------------------
+
+def test_lut_gemm_dc_pallas_matches_ref_and_jnp_path():
+    """The D&C Pallas kernel (interpret), the jnp oracle, and the engine's
+    decode-path matmul agree on identical frozen weights."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(8, 64)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(64, 48)), jnp.float32)
+    qw = quantize_weight(w, "lut_dc")
+    ref = lut_gemm_dc_ref(x, qw.codes, qw.hi_tab, qw.lo_tab,
+                          qw.zero_point, qw.scale)
+    pallas = lut4_matmul_kernel(x, w, interpret=True)
+    jnp_path = quantized_matmul(x, qw)
+    np.testing.assert_allclose(np.asarray(pallas), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(jnp_path), np.asarray(ref))
+
+
+def test_dc_decomposition_exact_for_affine_free_for_nf4():
+    """Paper Figs 2/3: an affine 16-entry LUT splits EXACTLY into two
+    4-entry sub-tables; the non-linear NF4 table pays a nonzero residual —
+    the capacity cost of the 6-vs-15-select area saving."""
+    uniform = jnp.arange(16, dtype=jnp.float32) * 0.37 - 2.1
+    hi, lo, res = dc_decompose_codebook(uniform)
+    assert float(jnp.max(jnp.abs(res))) < 1e-5
+    rebuilt = hi[:, None] + lo[None, :]
+    np.testing.assert_allclose(np.asarray(rebuilt.reshape(-1)),
+                               np.asarray(uniform), rtol=1e-5, atol=1e-5)
+    _, _, res_nf4 = dc_decompose_codebook(jnp.asarray(NF4_CODEBOOK))
+    assert float(jnp.max(jnp.abs(res_nf4))) > 0.05
+
+
+def test_quantized_weight_slices_under_scan():
+    """Scan-stacked containers: every array child carries the leading L
+    axis and lax.scan slices them per layer like float leaves."""
+    rng = np.random.default_rng(4)
+    ws = jnp.asarray(rng.normal(size=(3, 32, 16)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(2, 32)), jnp.float32)
+    qs = quantize_weight(ws, "lut_dc")
+    assert qs.codes.shape == (3, 32, 16) and qs.scale.shape == (3, 16)
+    assert qs.hi_tab.shape == (3, 4)
+
+    def body(c, qwi):
+        return c, quantized_matmul(x, qwi)
+
+    _, ys = jax.lax.scan(body, 0, qs)
+    per_layer = jnp.stack([
+        quantized_matmul(x, jax.tree.map(lambda a: a[i], qs))
+        for i in range(3)])
+    np.testing.assert_array_equal(np.asarray(ys), np.asarray(per_layer))
+
+
+# ---------------------------------------------------------------------------
+# engine behavior under quant
+# ---------------------------------------------------------------------------
+
+def test_lut4_and_int4_tokens_identical():
+    """Two evaluation strategies of the same affine grid: the D&C
+    sub-table LUT and direct dequant must emit identical tokens."""
+    cfg, params = _setup()
+    prompts = _prompts(cfg)
+    lut, _ = _serve(cfg, params, prompts, quant="lut4")
+    i4, _ = _serve(cfg, params, prompts, quant="int4")
+    assert lut == i4
+
+
+def test_quantized_greedy_agreement_above_threshold():
+    """Accuracy bound on served tokens: prefill is full precision so every
+    request's FIRST token matches bf16 exactly; overall greedy agreement
+    stays above threshold (random-init reduced model — trained weights
+    agree far more, see docs/quantization.md and the fig13 bound)."""
+    cfg, params = _setup()
+    prompts = _prompts(cfg)
+    base, _ = _serve(cfg, params, prompts)
+    lut, _ = _serve(cfg, params, prompts, quant="lut4")
+    for b, q in zip(base, lut):
+        assert b[0] == q[0]                       # prefill token: exact
+    agree = sum(a == b for o1, o2 in zip(base, lut)
+                for a, b in zip(o1, o2))
+    total = sum(len(o) for o in base)
+    assert agree / total >= 0.5, (agree, total)
+
+
+def test_fig13_ptq_within_documented_bound():
+    """The documented accuracy bound: the bf16-trained fig13 harness MLP,
+    frozen to 4-bit QuantizedWeight leaves, stays within PTQ_MAE_BOUND of
+    its own MAE — and both evaluation kernels land the same number."""
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "examples", "fig13_nn_accuracy.py")
+    spec = importlib.util.spec_from_file_location("fig13", path)
+    fig13 = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(fig13)
+    mae_ideal, trained = fig13.train_one("ideal")
+    mae_lut = fig13.ptq_mae(trained, "lut_dc")
+    mae_int = fig13.ptq_mae(trained, "dequant")
+    assert mae_lut <= mae_ideal * fig13.PTQ_MAE_BOUND, (mae_lut, mae_ideal)
+    assert mae_lut == mae_int
+
+
+def test_quant_composes_with_paged_and_prefix_cache():
+    """Warm == cold under quant: a lut4 engine with paged blocks + prefix
+    cache emits the same tokens for a shared-head prompt admitted cold
+    (populating the tree) and warm (seeded from COW blocks)."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(7)
+    head = rng.integers(1, cfg.vocab_size, 16).tolist()
+    tail_a = rng.integers(1, cfg.vocab_size, 4).tolist()
+    tail_b = rng.integers(1, cfg.vocab_size, 4).tolist()
+
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=2, max_seq=64, quant="lut4", paged=True, block_size=8,
+        prefix_cache=True))
+    cold = Request(rid=0, prompt=head + tail_a, max_new=6)
+    assert eng.serve([cold])["done"]
+    warm = Request(rid=1, prompt=head + tail_b, max_new=6)
+    stats = eng.serve([warm])
+    assert stats["done"] and stats["prefix_hits"] == 1
+
+    # reference: same requests on a quant engine WITHOUT the prefix cache
+    ref, _ = _serve(cfg, params, [head + tail_a, head + tail_b],
+                    max_new=6, quant="lut4", paged=True, block_size=8)
+    assert [cold.out, warm.out] == ref
+
+
+def test_quantized_decode_all_served_families():
+    """Every servable family decodes under lut4, with the exclusion rules
+    honored: MoE routed experts and MLA's direct-use w_uk/w_uv stay float
+    (they are einsum/reshape operands, not quant_matmul projections)."""
+    for arch in ("deepseek-v2-lite-16b", "mamba2-1.3b", "zamba2-1.2b"):
+        cfg, params = _setup(arch)
+        qp = quantize_decode_params(params, "lut4")
+        prompts = _prompts(cfg, lens=(4, 6))
+        base, _ = _serve(cfg, params, prompts, max_new=4)
+        lut, _ = _serve(cfg, params, prompts, max_new=4, quant="lut4")
+        assert all(len(o) == 4 for o in lut), (arch, lut)
+        assert [o[0] for o in base] == [o[0] for o in lut], arch
+        if cfg.family == "moe":
+            moe = qp["blocks"]["moe"]
+            assert not isinstance(moe["w_up"], QuantizedWeight)
+            assert isinstance(moe["shared"]["w_up"], QuantizedWeight)
+
+
+def test_mla_direct_use_leaves_stay_float():
+    """deepseek MLA consumes w_uk/w_uv via reshape+einsum — the tree
+    quantizer must never touch them."""
+    cfg, params = _setup("deepseek-v2-lite-16b")
+    qp = quantize_decode_params(params, "lut4")
+    attn = qp["blocks"]["attn"]
+    assert not isinstance(attn["w_uk"], QuantizedWeight)
+    assert not isinstance(attn["w_uv"], QuantizedWeight)
+    assert isinstance(attn["w_dkv"], QuantizedWeight)
+
+
+# ---------------------------------------------------------------------------
+# config surface
+# ---------------------------------------------------------------------------
+
+def test_engine_config_quant_validation():
+    with pytest.raises(ValueError, match="quant"):
+        EngineConfig(quant="nf4")
+    assert EngineConfig(quant="lut4").quant == "lut4"
+    assert EngineConfig().quant is None
+
+
+def test_engine_rejects_double_quantization():
+    """Engine-level frozen 4-bit + model-level dynamic quant would
+    quantize twice; the constructor refuses the combination."""
+    from repro.core.layers import QuantConfig
+    cfg, params = _setup(quant=QuantConfig(mode="luna_approx"))
+    with pytest.raises(ValueError, match="twice"):
+        Engine(cfg, params, EngineConfig(max_batch=1, max_seq=32,
+                                         quant="lut4"))
+
+
+def test_from_args_routes_shared_quant_flag():
+    """The shared --quant flag: engine modes land on EngineConfig.quant,
+    model-level spellings leave it None (the caller routes them into a
+    QuantConfig)."""
+    import argparse
+    ap = argparse.ArgumentParser()
+    EngineConfig.add_cli_args(ap)
+    args = ap.parse_args(["--quant", "lut4"])
+    assert EngineConfig.from_args(args).quant == "lut4"
+    args = ap.parse_args(["--quant", "luna_approx"])
+    assert EngineConfig.from_args(args).quant is None
+    args = ap.parse_args([])
+    assert EngineConfig.from_args(args).quant is None

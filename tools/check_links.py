@@ -1,0 +1,84 @@
+"""Markdown link checker (stdlib-only) for the docs CI job.
+
+Scans the given markdown files for inline links/images ``[text](target)``
+and reference definitions ``[label]: target``, and verifies that every
+*local* target resolves relative to the file that references it:
+
+* ``http(s)://`` / ``mailto:`` targets are skipped (no network in CI);
+* pure-anchor targets (``#section``) must match a heading in the same
+  file; ``path#anchor`` must match a heading in the target file
+  (GitHub-style slugs: lowercase, spaces to dashes, punctuation dropped);
+* everything else must exist on disk relative to the referencing file.
+
+Exit 1 with one line per broken link; exit 0 silent-ish on success.
+
+Usage: python tools/check_links.py README.md ROADMAP.md docs/*.md
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline [text](target) — stop at the first unescaped ')'; tolerate
+# "(target "title")".  Images are the same syntax behind '!'.
+INLINE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+REFDEF = re.compile(r"^\[[^\]]+\]:\s*(\S+)", re.MULTILINE)
+HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+FENCE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug: strip markdown/punctuation, lowercase,
+    spaces to dashes."""
+    text = re.sub(r"[`*_]", "", heading.strip())
+    text = re.sub(r"[^\w\- ]", "", text.lower())
+    return text.replace(" ", "-")
+
+
+def anchors_of(path: Path) -> set[str]:
+    return {slugify(h) for h in HEADING.findall(path.read_text())}
+
+
+def check_file(md: Path) -> list[str]:
+    text = FENCE.sub("", md.read_text())   # links inside code fences are code
+    targets = INLINE.findall(text) + REFDEF.findall(text)
+    errors = []
+    for t in targets:
+        if t.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = t.partition("#")
+        dest = md if not path_part else (md.parent / path_part).resolve()
+        if path_part and not dest.exists():
+            errors.append(f"{md}: broken link target '{t}' "
+                          f"(no such file: {dest})")
+            continue
+        if anchor and dest.suffix == ".md":
+            if slugify(anchor) not in anchors_of(dest):
+                errors.append(f"{md}: broken anchor '{t}' "
+                              f"(no heading '#{anchor}' in {dest.name})")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    files = [Path(a) for a in argv]
+    if not files:
+        print("usage: python tools/check_links.py FILE.md [FILE.md ...]",
+              file=sys.stderr)
+        return 2
+    errors = []
+    for md in files:
+        if not md.exists():
+            errors.append(f"{md}: file not found")
+            continue
+        errors.extend(check_file(md))
+    for e in errors:
+        print(e, file=sys.stderr)
+    if errors:
+        return 1
+    print(f"check_links: {len(files)} files OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
