@@ -12,6 +12,9 @@ prefill tok/s (a prefix cache that doesn't out-run recomputation is a
 regression no baseline drift can excuse).  The ``quant`` section is gated
 on presence: bf16/lut4/int4 decode rows must all report a positive tok/s
 (the frozen-4-bit decode path must never silently drop out of the bench).
+The ``sustained`` section (trace-driven load harness, virtual-time
+deterministic) is gated absolutely too: present, goodput positive, and
+high-priority p99 TTFT strictly below low-priority under overload.
 A markdown delta table is printed (append to ``$GITHUB_STEP_SUMMARY`` via
 ``--summary`` in CI).
 
@@ -127,6 +130,37 @@ def check_quant_section(current: dict) -> list[str]:
     return fails
 
 
+def check_sustained_section(current: dict) -> list[str]:
+    """Absolute gate on the ``sustained`` section (trace-driven load
+    harness, deterministic virtual-time runs): the section must be
+    present, every arch must report positive goodput, and under overload
+    the priority scheduler must hold the latency split — high-priority
+    (class 1) p99 TTFT strictly below low-priority (class 0).  These
+    numbers come from a virtual clock, so any change is a real behavior
+    change, not timing noise."""
+    sus = current.get("sustained")
+    if not sus:
+        return ["sustained: section missing from the current run "
+                "(load-harness scenario dropped?)"]
+    fails = []
+    for arch, rep in sus.items():
+        good = rep.get("goodput_tok_s")
+        if good is None or good <= 0:
+            fails.append(f"sustained.{arch}: goodput_tok_s {good} "
+                         "not positive")
+        byp = rep.get("by_priority", {})
+        hi = (byp.get("1", {}).get("ttft") or {}).get("p99_s")
+        lo = (byp.get("0", {}).get("ttft") or {}).get("p99_s")
+        if hi is None or lo is None:
+            fails.append(f"sustained.{arch}: per-priority ttft p99 missing")
+        elif hi >= lo:
+            fails.append(
+                f"sustained.{arch}: high-priority p99 TTFT {hi * 1e3:,.1f} "
+                f"ms does not beat low-priority {lo * 1e3:,.1f} ms under "
+                "overload")
+    return fails
+
+
 def markdown_table(rows, threshold: float) -> str:
     def fmt(v):
         return "—" if v is None else f"{v:,.1f}"
@@ -163,7 +197,9 @@ def main() -> None:
     prefix_fails = check_prefix_win(current)
     latency_fails = check_latency_order(current)
     quant_fails = check_quant_section(current)
-    abs_fails = prefix_fails + latency_fails + quant_fails
+    sustained_fails = check_sustained_section(current)
+    abs_fails = (prefix_fails + latency_fails + quant_fails
+                 + sustained_fails)
     table = markdown_table(rows, args.threshold)
     if abs_fails:
         table += "\n" + "\n".join(f"❌ {m}" for m in abs_fails) + "\n"
@@ -185,6 +221,13 @@ def main() -> None:
                               if isinstance(r, dict)
                               and "decode_tok_s" in r)
             table += f"✅ quant decode tok/s: {modes}\n"
+        sus = current.get("sustained", {})
+        if sus:
+            parts = ", ".join(
+                f"{a} {r['goodput_tok_s']:.0f} tok/s "
+                f"(miss {r['deadline_miss_rate']:.0%})"
+                for a, r in sus.items())
+            table += f"✅ sustained goodput: {parts}\n"
     print(table)
     if args.summary:
         with open(args.summary, "a") as f:

@@ -1,0 +1,306 @@
+"""Trace-based load harness: open-loop traffic against the serving engine.
+
+Two drive modes over the same trace format:
+
+* **virtual** (`run_virtual`) — the engine is built with a
+  :class:`VirtualClock`; the harness delivers each arrival the moment
+  virtual time reaches it (`engine.serve([req], max_ticks=0)` enqueues
+  without ticking), hand-ticks the engine, and advances the clock by a
+  fixed per-tick cost.  Every timestamp the engine stamps (submit, token,
+  deadline comparisons) lands on the virtual clock, so goodput,
+  deadline-miss rate, and TTFT/ITL percentiles are **bit-deterministic**
+  across runs and machines — this mode produces the gated "sustained"
+  section of `BENCH_engine.json`.
+* **threaded** (`run_threaded`) — the real thing: `engine.start()` runs
+  the background serve loop, a `ThreadPoolExecutor` of client threads
+  (the SNIPPETS Snippet-2 harness idiom) sleeps each request until its
+  arrival time, `submit()`s against the running loop, and consumes
+  `handle.tokens()` concurrently.  Wall-clock numbers; used as the
+  loop-integration smoke (goodput > 0), not for gating.
+
+Traces are open-loop (arrival times fixed up front, independent of
+service — the honest way to measure overload): Poisson arrivals with
+mixed priorities, prompt lengths, and per-priority deadline budgets.
+
+Run standalone:
+
+  PYTHONPATH=src python benchmarks/load_harness.py --arch yi-9b \
+      --requests 64 --rate 200 --out LOAD_harness.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+class VirtualClock:
+    """Deterministic engine clock: a monotonic counter advanced by hand.
+    Inject via ``Engine(cfg, params, config, clock=VirtualClock())`` —
+    every ``submit_ts``/``token_ts``/deadline comparison then lives in
+    virtual seconds."""
+
+    def __init__(self, start: float = 0.0):
+        self.now = float(start)
+
+    def __call__(self) -> float:
+        return self.now
+
+    def advance(self, dt: float) -> float:
+        assert dt >= 0, dt
+        self.now += dt
+        return self.now
+
+
+@dataclass
+class TraceItem:
+    """One scheduled arrival: request shape + when it hits the engine.
+    ``deadline_budget`` is seconds from arrival to the first-token
+    deadline (None = no deadline)."""
+    at: float
+    prompt: list[int]
+    max_new: int
+    priority: int = 0
+    deadline_budget: float | None = None
+
+
+@dataclass
+class TraceStats:
+    """Per-run accounting produced by :func:`summarize`."""
+    report: dict = field(default_factory=dict)
+
+
+def make_trace(n: int, rate: float, vocab: int, seed: int = 0,
+               prompt_lens=(4, 8, 12, 24), max_new: int = 8,
+               priorities=((0, 0.7), (1, 0.3)),
+               deadline_budgets={0: None, 1: 0.5}) -> list[TraceItem]:
+    """Open-loop Poisson trace: exponential inter-arrival gaps at ``rate``
+    req/s, prompt lengths and priority classes drawn from the given
+    mixes.  Fully determined by ``seed``."""
+    rng = np.random.default_rng(seed)
+    classes = [p for p, _ in priorities]
+    weights = np.asarray([w for _, w in priorities], float)
+    weights = weights / weights.sum()
+    t = 0.0
+    trace = []
+    for _ in range(n):
+        t += float(rng.exponential(1.0 / rate))
+        prio = int(rng.choice(classes, p=weights))
+        plen = int(rng.choice(prompt_lens))
+        prompt = rng.integers(1, vocab, plen).tolist()
+        trace.append(TraceItem(at=t, prompt=prompt, max_new=max_new,
+                               priority=prio,
+                               deadline_budget=deadline_budgets.get(prio)))
+    return trace
+
+
+def _percentiles(xs: list[float]) -> dict:
+    if not xs:
+        return {"p50_s": None, "p99_s": None}
+    a = np.asarray(xs, float)
+    return {"p50_s": float(np.percentile(a, 50)),
+            "p99_s": float(np.percentile(a, 99))}
+
+
+def summarize(reqs: list, duration_s: float) -> dict:
+    """Goodput / deadline / latency report over served requests.  Goodput
+    counts only tokens of requests that FINISHED and (when they carried a
+    deadline) got their first token in time — late work is throughput,
+    not goodput."""
+    def ttft(r):
+        return r.token_ts[0] - r.submit_ts if r.token_ts else None
+
+    def itls(r):
+        return [b - a for a, b in zip(r.token_ts, r.token_ts[1:])]
+
+    finished = [r for r in reqs if r.done and not r.cancelled]
+    with_dl = [r for r in finished if r.deadline is not None and r.token_ts]
+    missed = [r for r in with_dl if r.token_ts[0] > r.deadline]
+    good = [r for r in finished
+            if r.deadline is None or (r.token_ts
+                                      and r.token_ts[0] <= r.deadline)]
+    by_priority = {}
+    for prio in sorted({r.priority for r in reqs}):
+        rs = [r for r in finished if r.priority == prio]
+        tt = [ttft(r) for r in rs if r.token_ts]
+        by_priority[str(prio)] = {
+            "finished": len(rs),
+            "ttft": _percentiles(tt),
+            "itl": _percentiles([g for r in rs for g in itls(r)]),
+        }
+    return {
+        "submitted": len(reqs),
+        "finished": len(finished),
+        "duration_s": duration_s,
+        "goodput_tok_s": (sum(len(r.out) for r in good)
+                          / max(duration_s, 1e-9)),
+        "throughput_tok_s": (sum(len(r.out) for r in finished)
+                             / max(duration_s, 1e-9)),
+        "deadline_requests": len(with_dl),
+        "deadline_misses": len(missed),
+        "deadline_miss_rate": (len(missed) / len(with_dl)
+                               if with_dl else 0.0),
+        "ttft": _percentiles([ttft(r) for r in finished if r.token_ts]),
+        "itl": _percentiles([g for r in finished for g in itls(r)]),
+        "by_priority": by_priority,
+    }
+
+
+def run_virtual(engine, trace: list[TraceItem], tick_cost_s: float = 0.01,
+                max_ticks: int = 100_000) -> dict:
+    """Deterministic drive: the engine's clock MUST be a
+    :class:`VirtualClock`.  Arrivals are enqueued exactly at their trace
+    time (``submit_ts`` pinned to the intended arrival, so queueing delay
+    under overload is charged to TTFT), each tick costs ``tick_cost_s``
+    virtual seconds, and the run ends when the trace is drained and the
+    engine idles."""
+    from repro.serve.engine import Request
+
+    vc = engine.clock
+    assert isinstance(vc, VirtualClock), \
+        "run_virtual needs Engine(..., clock=VirtualClock())"
+    t_start = vc.now
+    reqs = []
+    i, ticks = 0, 0
+    while (i < len(trace) or not engine.idle) and ticks < max_ticks:
+        while i < len(trace) and trace[i].at <= vc.now:
+            it = trace[i]
+            req = Request(rid=i, prompt=list(it.prompt), max_new=it.max_new,
+                          priority=it.priority,
+                          deadline=(it.at + it.deadline_budget
+                                    if it.deadline_budget is not None
+                                    else None))
+            req.submit_ts = it.at
+            engine.serve([req], max_ticks=0)       # enqueue, no ticking
+            reqs.append(req)
+            i += 1
+        if engine.idle:
+            vc.advance(trace[i].at - vc.now)       # jump to next arrival
+            continue
+        vc.advance(tick_cost_s)
+        engine.step()
+        ticks += 1
+    rep = summarize(reqs, vc.now - t_start)
+    rep.update({"mode": "virtual", "ticks": ticks,
+                "tick_cost_s": tick_cost_s,
+                "drained": engine.idle and i == len(trace)})
+    return rep
+
+
+def run_threaded(engine, trace: list[TraceItem], time_scale: float = 1.0,
+                 max_workers: int = 8) -> dict:
+    """Real-time drive against the background serve loop: one client task
+    per trace item sleeps until its (scaled) arrival, submits, and
+    consumes the handle's token stream.  Wall-clock, so numbers are
+    machine-dependent — smoke only."""
+    from repro.serve.engine import Request
+
+    started_here = not engine.running
+    engine.start()
+    base = engine.clock()
+    reqs = [None] * len(trace)
+
+    def client(i: int):
+        it = trace[i]
+        delay = base + it.at * time_scale - engine.clock()
+        if delay > 0:
+            time.sleep(delay)
+        req = Request(rid=i, prompt=list(it.prompt), max_new=it.max_new,
+                      priority=it.priority,
+                      deadline=(engine.clock() + it.deadline_budget
+                                if it.deadline_budget is not None
+                                else None))
+        reqs[i] = req
+        handle = engine.submit(req)
+        stream = list(handle.tokens())
+        assert stream == req.out, f"rid {i}: stream diverged from req.out"
+        return len(stream)
+
+    with ThreadPoolExecutor(max_workers=max_workers) as pool:
+        list(pool.map(client, range(len(trace))))
+    if started_here:
+        engine.stop()
+    rep = summarize([r for r in reqs if r is not None],
+                    engine.clock() - base)
+    rep.update({"mode": "threaded", "time_scale": time_scale})
+    return rep
+
+
+def build_engine(arch: str = "yi-9b", *, clock=None, max_batch: int = 2,
+                 max_seq: int = 64, **knobs):
+    """Tiny reduced-config engine for harness runs (mirrors the bench
+    builder; float32 so every platform agrees)."""
+    import jax
+
+    from repro.models.registry import get_config, get_model
+    from repro.serve.config import EngineConfig
+    from repro.serve.engine import Engine
+
+    cfg = get_config(arch).reduced(dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    config = EngineConfig(max_batch=max_batch, max_seq=max_seq, **knobs)
+    return Engine(cfg, params, config, clock=clock), cfg
+
+
+def sustained_report(arches=("yi-9b", "mamba2-1.3b"), n: int = 48,
+                     rate: float = 100.0, tick_cost_s: float = 0.01,
+                     seed: int = 0) -> dict:
+    """The gated sustained-load numbers: per arch, one deterministic
+    virtual-time overload run (arrival rate far above service capacity so
+    the scheduler's priority/deadline machinery is actually exercised).
+    Deadline budgets are sized so the low-priority class misses under
+    overload while high-priority work mostly holds."""
+    out = {}
+    for arch in arches:
+        eng, cfg = build_engine(arch, clock=VirtualClock())
+        trace = make_trace(n, rate, cfg.vocab_size, seed=seed,
+                           deadline_budgets={0: 0.8, 1: 0.5})
+        out[arch] = run_virtual(eng, trace, tick_cost_s=tick_cost_s)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b")
+    ap.add_argument("--requests", type=int, default=48)
+    ap.add_argument("--rate", type=float, default=100.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tick-cost-s", type=float, default=0.01)
+    ap.add_argument("--threaded", action="store_true",
+                    help="also run the real background-loop drive")
+    ap.add_argument("--time-scale", type=float, default=0.02,
+                    help="threaded mode: wall seconds per trace second")
+    ap.add_argument("--out", default="LOAD_harness.json")
+    args = ap.parse_args()
+
+    report = {"arch": args.arch, "requests": args.requests,
+              "rate_rps": args.rate, "seed": args.seed}
+    eng, cfg = build_engine(args.arch, clock=VirtualClock())
+    trace = make_trace(args.requests, args.rate, cfg.vocab_size,
+                       seed=args.seed, deadline_budgets={0: 0.8, 1: 0.5})
+    report["virtual"] = run_virtual(eng, trace,
+                                    tick_cost_s=args.tick_cost_s)
+    if args.threaded:
+        eng2, _ = build_engine(args.arch)
+        report["threaded"] = run_threaded(eng2, trace,
+                                          time_scale=args.time_scale)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    v = report["virtual"]
+    print(f"[load_harness] {args.arch}: goodput "
+          f"{v['goodput_tok_s']:.1f} tok/s (virtual), deadline miss "
+          f"{v['deadline_miss_rate']:.0%} "
+          f"({v['deadline_misses']}/{v['deadline_requests']}), "
+          f"ttft p99 {v['ttft']['p99_s']:.3f}s -> {args.out}")
+
+
+if __name__ == "__main__":
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    main()

@@ -12,6 +12,11 @@ Engine knobs are single-sourced in ``repro.serve.config.EngineConfig`` —
 lut4|int4`` freezes 4-bit decode weights on the engine; any other spelling
 (bf16, int8, luna_*, ...) is a model-level mode applied to every
 projection dynamically.
+
+The CLI serves from the BACKGROUND LOOP by default (``engine.start()``,
+one ``submit()`` per request, streams consumed off the loop thread,
+``engine.stop()`` drains) — the same path a network front-end would use.
+``--sync`` keeps the old caller-pumped ``engine.serve(requests)`` path.
 """
 from __future__ import annotations
 
@@ -26,9 +31,14 @@ def main():
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--sync", action="store_true",
+                    help="caller-pumped engine.serve() instead of the "
+                         "background serve loop")
     EngineConfig.add_cli_args(ap)
     ap.set_defaults(max_batch=4, max_seq=128, quant="bf16")
     args = ap.parse_args()
+
+    from dataclasses import replace
 
     import jax
     import numpy as np
@@ -41,7 +51,6 @@ def main():
     if args.reduced:
         cfg = cfg.reduced()
     if args.quant not in ("bf16", *ENGINE_QUANT_MODES):
-        from dataclasses import replace
         cfg = replace(cfg, quant=QuantConfig(mode=args.quant))
 
     model = get_model(cfg)
@@ -52,7 +61,23 @@ def main():
                     prompt=rng.integers(1, cfg.vocab_size, 6).tolist(),
                     max_new=args.max_new)
             for i in range(args.requests)]
-    stats = engine.serve(reqs)
+    if args.sync:
+        stats = engine.serve(reqs)
+    else:
+        from concurrent.futures import ThreadPoolExecutor
+
+        start = replace(engine.metrics)
+        t0 = engine.clock()
+        engine.start()
+        handles = [engine.submit(r) for r in reqs]
+        with ThreadPoolExecutor(max_workers=min(8, len(handles))) as pool:
+            streams = list(pool.map(lambda h: list(h.tokens()), handles))
+        engine.stop()
+        for r, s in zip(reqs, streams):
+            assert s == r.out, f"rid {r.rid}: stream diverged from out"
+        stats = engine.metrics.since(start).summary(engine.max_batch)
+        stats.update({"wall_s": engine.clock() - t0,
+                      "done": all(r.done for r in reqs)})
     tok_count = sum(len(r.out) for r in reqs)
     print(f"{tok_count} tokens over {len(reqs)} requests: "
           f"{stats['wall_s']:.2f}s wall, done={stats['done']}")

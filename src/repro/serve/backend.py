@@ -67,6 +67,24 @@ class CacheBackend:
         self.stage_len = max_seq
         self._batch_axes = self._find_batch_axes()
         self._pool_leaves = self._find_pool_leaves()
+        self._lock = None
+
+    # --- thread discipline ----------------------------------------------
+    def bind_lock(self, lock) -> None:
+        """The engine hands over its state lock: backend state (block
+        pool accounting, slot tables, the cache slab reference) is only
+        ever mutated while that lock is held — the tick and the public
+        engine mutators all run under it, so the backend itself stays
+        lock-free with a single-writer guarantee.  Mutating entry points
+        assert the discipline instead of silently racing."""
+        self._lock = lock
+
+    def _assert_owned(self) -> None:
+        lock = self._lock
+        if lock is not None:
+            owned = getattr(lock, "_is_owned", None)
+            assert owned is None or owned(), \
+                "backend state mutated without holding the engine lock"
 
     # --- cache-slab layout (structural probes) --------------------------
     def _find_batch_axes(self):
@@ -299,6 +317,7 @@ class PagedPool(CacheBackend):
         share) and allocates only the tail privately; when the pool runs
         short, ``on_short(need)`` may free capacity (prefix-cache LRU
         eviction) before backpressuring.  False = pool short."""
+        self._assert_owned()
         shared = list(shared) if shared else []
         need = blocks_needed(prompt_len, max_new, self.max_seq,
                              self.block_size) - len(shared)
@@ -322,6 +341,7 @@ class PagedPool(CacheBackend):
         return True
 
     def free_slot(self, slot):
+        self._assert_owned()
         if self._slot_blocks[slot]:
             self.allocator.release(self._slot_blocks[slot])
             self._slot_blocks[slot] = []

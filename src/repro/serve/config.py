@@ -15,14 +15,12 @@ config back out of the parsed namespace — both launch CLIs
 (``repro.launch.serve`` and ``examples/serve_luna.py``) share them, so a
 new knob is added in exactly one place.
 
-Legacy ``Engine(cfg, params, max_batch=..., paged=..., ...)`` kwargs keep
-working for one release through a deprecation shim in the engine
-constructor (:func:`config_from_legacy_kwargs` builds the equivalent
-config and the engine warns ``DeprecationWarning`` once per construction).
+Legacy ``Engine(cfg, params, max_batch=..., paged=..., ...)`` kwargs were
+removed one release after the v2 API landed (as promised): the engine
+constructor takes an :class:`EngineConfig` and nothing else.
 """
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass, fields, replace
 
 from repro.serve.sampling import SamplingConfig
@@ -53,6 +51,10 @@ class EngineConfig:
     * ``starvation_bound`` — scheduler aging threshold: a queued request
       passed over this many times gains one priority bucket (see
       ``repro.serve.engine.Scheduler``).
+    * ``idle_backoff_s`` — background serve loop (``engine.start()``):
+      how long the loop thread sleeps when there is no queued, staged, or
+      active work before re-checking (a ``submit()``/``cancel()`` wakes it
+      immediately, so this only bounds shutdown latency and idle spin).
     * ``quant`` — decode weight quantization: ``"lut4"`` freezes decode
       projections to 4-bit codes evaluated through the paper's D&C
       sub-table LUT GEMM, ``"int4"`` is the direct-dequant baseline
@@ -73,6 +75,7 @@ class EngineConfig:
     seed: int = 0
     starvation_bound: int = 8
     quant: str | None = None
+    idle_backoff_s: float = 0.002
 
     def __post_init__(self):
         if self.quant is not None and self.quant not in ENGINE_QUANT_MODES:
@@ -99,6 +102,9 @@ class EngineConfig:
         if self.starvation_bound < 1:
             raise ValueError(f"starvation_bound must be >= 1, "
                              f"got {self.starvation_bound}")
+        if self.idle_backoff_s < 0:
+            raise ValueError(f"idle_backoff_s must be >= 0, "
+                             f"got {self.idle_backoff_s}")
 
     # --- family cross-validation ----------------------------------------
     def validate(self, family: str) -> None:
@@ -155,6 +161,9 @@ class EngineConfig:
                              "(ssm) and prefill only the uncached tail")
         ap.add_argument("--prefix-cache-nodes", type=int, default=None,
                         help="LRU budget for cached prefix boundaries")
+        ap.add_argument("--idle-backoff-s", type=float, default=None,
+                        help="background serve loop: idle sleep between "
+                             "re-checks when no work is pending")
         ap.add_argument("--sampling", default="greedy",
                         choices=["greedy", "temperature", "top_k"])
         ap.add_argument("--temperature", type=float, default=1.0)
@@ -196,21 +205,3 @@ class EngineConfig:
             top_k=getattr(args, "top_k", 0) if mode == "top_k" else 0)
         vals.update(overrides)
         return replace(cfg, **vals)
-
-
-#: legacy Engine(**kwargs) names accepted by the deprecation shim
-LEGACY_ENGINE_KWARGS = tuple(f.name for f in fields(EngineConfig))
-
-
-def config_from_legacy_kwargs(kwargs: dict) -> EngineConfig:
-    """Deprecation shim for pre-v2 ``Engine(cfg, params, **knobs)`` calls:
-    map the old constructor kwargs onto an :class:`EngineConfig` and warn.
-    Removed one release after the v2 API lands."""
-    bad = set(kwargs) - set(LEGACY_ENGINE_KWARGS)
-    if bad:
-        raise TypeError(f"unknown Engine kwargs: {sorted(bad)}")
-    warnings.warn(
-        "Engine(cfg, params, **knobs) is deprecated; pass "
-        "Engine(cfg, params, EngineConfig(...)) instead "
-        "(see the README migration table)", DeprecationWarning, stacklevel=3)
-    return EngineConfig(**kwargs)

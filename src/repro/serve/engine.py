@@ -11,8 +11,8 @@ program per bucket shape).
 
 **Serving API v2.**  All knobs live in one validated
 :class:`repro.serve.config.EngineConfig` (``Engine(cfg, params,
-EngineConfig(...))``; legacy ``Engine(cfg, params, **knobs)`` still works
-for one release behind a ``DeprecationWarning``).  ``submit()`` returns a
+EngineConfig(...))``; the legacy ``Engine(cfg, params, **knobs)`` shim was
+removed after its one-release deprecation window).  ``submit()`` returns a
 :class:`RequestHandle` — incremental token streaming (generator and
 on-token callback), ``cancel()`` that releases blocks and staged state
 mid-admission, and truthiness preserving the legacy admitted-now contract.
@@ -20,6 +20,23 @@ Queued admission order is no longer FIFO: a :class:`Scheduler` orders by
 priority class with deadline-aware tie-breaks and a one-bucket aging rule
 (starvation bound), and owns the head-of-line stall state so paged
 backpressure survives across ``serve()`` calls.
+
+**Background serve loop.**  The engine is no longer caller-pumped only:
+``engine.start()`` runs the tick on a daemon thread and ``engine.stop()``
+drains it, so ``RequestHandle.tokens()`` blocks on a per-handle queue and
+streams to real clients without anyone hand-ticking ``serve()``.  The
+locking discipline is ONE re-entrant lock around all scheduler + slot +
+backend state: every public mutator (``submit``/``cancel``/``preempt``/
+``step``/``serve``) takes it, the whole tick runs under it, and the cache
+backend asserts it is held before mutating pool state — there is exactly
+one writer at any instant, the jit calls themselves are single-threaded,
+and the synchronous ``serve(requests)`` path is a thin wrapper over the
+same ``_tick()`` so loop-mode output is token-identical to sync output
+(pinned).  All timestamps (``submit_ts``/``token_ts``/``deadline``) share
+one time base: the injected ``clock`` callable (default
+``time.perf_counter``), so a virtual clock makes latency and
+deadline-miss accounting fully deterministic (see
+``benchmarks/load_harness.py``).
 
 The cache substrate is fully owned by :mod:`repro.serve.backend`: the
 engine holds ONE :class:`~repro.serve.backend.CacheBackend` and never
@@ -63,6 +80,8 @@ projection goes through the LUNA integer path.
 from __future__ import annotations
 
 import math
+import queue
+import threading
 import time
 from dataclasses import dataclass, field, fields, replace
 
@@ -72,7 +91,7 @@ import numpy as np
 
 from repro.models.registry import get_model
 from repro.serve.backend import make_backend
-from repro.serve.config import EngineConfig, config_from_legacy_kwargs
+from repro.serve.config import EngineConfig
 from repro.serve.paged import ceil_div
 from repro.serve.prefix_cache import PrefixCache
 from repro.serve.sampling import SamplingConfig, sample
@@ -83,10 +102,16 @@ class Request:
     """One generation request.
 
     ``priority``: scheduler class — higher admits first (e.g. 0 = batch,
-    1 = interactive).  ``deadline``: wall-clock stamp used as the
-    within-class tie-break (earlier = sooner; None = no deadline).
-    ``submit_ts``/``token_ts`` are stamped by the engine — TTFT is
-    ``token_ts[0] - submit_ts``, ITL the consecutive ``token_ts`` gaps.
+    1 = interactive).  ``deadline``: a stamp on the ENGINE CLOCK (the
+    ``clock`` callable injected at construction, default
+    ``time.perf_counter`` — compute deadlines as ``engine.clock() +
+    budget``, NOT ``time.time()``) used as the within-class tie-break
+    (earlier = sooner; None = no deadline) and for first-token
+    deadline-miss accounting.  ``submit_ts``/``token_ts`` are stamped by
+    the engine on the same clock — TTFT is ``token_ts[0] - submit_ts``,
+    ITL the consecutive ``token_ts`` gaps; one time base means every
+    latency and deadline quantity is directly comparable (and
+    deterministic under a virtual clock).
     ``eq=False``: a request is an identity (the engine keys streaming
     callbacks on the object itself, so rid reuse can never cross streams).
     """
@@ -102,18 +127,29 @@ class Request:
     token_ts: list[float] = field(default_factory=list, repr=False)
 
 
+#: end-of-stream sentinel pushed onto every subscribed token queue at
+#: retirement (completion OR cancellation) — queue consumers never poll.
+_STREAM_DONE = object()
+
+
 class RequestHandle:
     """Live view of one submitted request.
 
     * truthiness — ``bool(handle)`` is the legacy ``submit()`` contract:
-      True iff the request was admitted immediately (False = backpressure;
-      the request is NOT queued — retry, or hand it to ``serve()``).
-    * streaming — :meth:`tokens` yields tokens incrementally, driving the
-      engine between yields; an ``on_token`` callback registered at
-      ``submit()`` fires synchronously per emitted token.  The streamed
-      sequence is exactly ``req.out`` (pinned in tests).
+      True iff the request was admitted immediately.  False = backpressure:
+      with the background loop running the request IS left queued on the
+      scheduler (the loop admits it when capacity frees); without the loop
+      it is NOT queued — retry, or hand it to ``serve()``.
+    * streaming — :meth:`tokens` yields tokens incrementally.  While the
+      background loop runs it BLOCKS on a per-handle queue (each emitted
+      token is pushed under the engine lock, so no token is missed or
+      duplicated); without the loop it drives the engine one tick at a
+      time between yields, exactly as before.  An ``on_token`` callback
+      registered at ``submit()`` fires synchronously per emitted token.
+      The streamed sequence is exactly ``req.out`` (pinned in tests).
     * :meth:`cancel` — releases the request's slot, blocks and staged
-      state wherever it currently is in the lifecycle.
+      state wherever it currently is in the lifecycle; safe from any
+      thread.
     """
 
     def __init__(self, engine: "Engine", req: Request, on_token=None):
@@ -150,33 +186,62 @@ class RequestHandle:
 
     def tokens(self):
         """Generator of this request's tokens, in emission order, ending
-        when the request completes (or is cancelled).  Drives the engine
-        one tick at a time while waiting; an un-admitted handle re-attempts
-        admission between ticks."""
-        i = 0
+        when the request completes (or is cancelled).
+
+        With the background loop running this blocks on the handle's
+        stream queue — the loop thread does all engine work and each
+        ``get`` wakes exactly when the next token (or the end-of-stream
+        sentinel) lands.  Without the loop it drives the engine one tick
+        at a time while waiting, and an un-admitted handle re-attempts
+        admission between ticks (the legacy contract).  The two modes
+        compose: the generator re-checks ``engine.running`` on every wait
+        so a loop started or stopped mid-stream is picked up."""
+        eng = self._engine
+        q = eng._subscribe(self.req)
         while True:
-            while i < len(self.req.out):
-                yield self.req.out[i]
-                i += 1
-            if self.req.done:
+            try:
+                tok = q.get_nowait()
+            except queue.Empty:
+                tok = None
+            if tok is _STREAM_DONE:
                 return
+            if tok is not None:
+                yield tok
+                continue
+            if eng.running:
+                # loop mode: block until the loop delivers (bounded wait so
+                # a stop(drain=False) mid-stream falls back to sync mode)
+                try:
+                    tok = q.get(timeout=0.1)
+                except queue.Empty:
+                    continue
+                if tok is _STREAM_DONE:
+                    return
+                yield tok
+                continue
+            # sync mode: the caller's thread is the engine
+            if self.req.done:
+                continue        # sentinel is already in the queue
             if not self._admitted:
-                self._admitted = self._engine._admit_handle(self)
-                if not self._admitted and self._engine.idle:
+                self._admitted = eng._admit_handle(self)
+                if not self._admitted and eng.idle:
                     raise RuntimeError(
                         f"request {self.req.rid} cannot be admitted on an "
                         "idle engine (capacity permanently short?)")
             if not self.req.done:
-                self._engine.step()
+                eng.step()
 
 
 @dataclass(eq=False)
 class _QueueEntry:
     """Scheduler bookkeeping for one queued request.  ``passed`` counts
-    admissions that went to OTHER requests while this one waited."""
+    admissions that went to OTHER requests while this one waited;
+    ``enqueue_ts`` is stamped on the scheduler's clock (the engine's
+    injected clock) so queue-wait time shares the single time base."""
     req: Request
     arrival: int
     passed: int = 0
+    enqueue_ts: float = 0.0
 
 
 class Scheduler:
@@ -210,8 +275,9 @@ class Scheduler:
     record.
     """
 
-    def __init__(self, starvation_bound: int = 8):
+    def __init__(self, starvation_bound: int = 8, clock=None):
         self.starvation_bound = starvation_bound
+        self.clock = clock if clock is not None else time.perf_counter
         self._queue: list[_QueueEntry] = []
         self._arrivals = 0
         self._stalls: dict[int, int] = {}
@@ -221,8 +287,13 @@ class Scheduler:
         return len(self._queue)
 
     def push(self, req: Request) -> None:
-        self._queue.append(_QueueEntry(req, self._arrivals))
+        self._queue.append(_QueueEntry(req, self._arrivals,
+                                       enqueue_ts=self.clock()))
         self._arrivals += 1
+
+    def queued(self, req: Request) -> bool:
+        """True if ``req`` (by object identity) is currently queued."""
+        return any(e.req is req for e in self._queue)
 
     def aged(self, e: _QueueEntry) -> bool:
         return e.passed >= self.starvation_bound
@@ -328,6 +399,9 @@ class EngineMetrics:
     prefix_tokens_reused: int = 0   # prompt tokens NOT re-prefilled
     cache_evictions: int = 0     # prefix-cache nodes evicted (LRU)
     cancelled: int = 0           # requests cancelled mid-lifecycle
+    preemptions: int = 0         # active requests kicked back to the queue
+    deadline_hits: int = 0       # first token on or before req.deadline
+    deadline_misses: int = 0     # first token after req.deadline
 
     def since(self, start: "EngineMetrics") -> "EngineMetrics":
         """Per-call delta: these counters minus a ``start`` snapshot (the
@@ -353,19 +427,23 @@ class EngineMetrics:
             "prefix_tokens_reused": self.prefix_tokens_reused,
             "cache_evictions": self.cache_evictions,
             "cancelled": self.cancelled,
+            "preemptions": self.preemptions,
+            "deadline_hits": self.deadline_hits,
+            "deadline_misses": self.deadline_misses,
         }
         return d
 
 
 class Engine:
     def __init__(self, cfg, params, config: EngineConfig | None = None,
-                 **legacy):
-        if legacy:
-            if config is not None:
-                raise TypeError(
-                    "pass EngineConfig OR legacy kwargs, not both")
-            config = config_from_legacy_kwargs(legacy)
-        elif config is None:
+                 *, clock=None):
+        """``clock``: the engine's single time base — a zero-arg callable
+        returning monotonic seconds (default ``time.perf_counter``).
+        Every ``submit_ts``/``token_ts`` stamp, metrics wall-clock
+        interval, and deadline comparison goes through it, so injecting a
+        virtual clock makes latency + deadline accounting deterministic
+        (the load harness does exactly that)."""
+        if config is None:
             config = EngineConfig()
         config.validate(cfg.family)
         if config.quant is not None and getattr(cfg, "quant", None) is not \
@@ -408,7 +486,18 @@ class Engine:
         self._chunked: list[_ChunkedPrefill] = []
         self._admitting = False        # _admit in flight (emit window)
         self._callbacks: dict[Request, list] = {}
-        self.scheduler = Scheduler(config.starvation_bound)
+        self._streams: dict[Request, list[queue.SimpleQueue]] = {}
+        self.clock = clock if clock is not None else time.perf_counter
+        # ONE re-entrant lock guards scheduler + slot + backend state:
+        # every public mutator and the whole tick run under it
+        self._lock = threading.RLock()
+        self.backend.bind_lock(self._lock)
+        self._loop_thread: threading.Thread | None = None
+        self._loop_stop = threading.Event()
+        self._loop_wake = threading.Event()
+        self._drain_on_stop = True
+        self.scheduler = Scheduler(config.starvation_bound,
+                                   clock=self.clock)
         self.metrics = EngineMetrics()
         self._prefill = jax.jit(self._prefill_impl)
         self._decode = jax.jit(self._decode_impl)
@@ -526,16 +615,41 @@ class Engine:
     # --- token emission / retirement ------------------------------------
     def _emit(self, req: Request, tok: int):
         """Append one generated token: the single emission point — output
-        list, latency stamp, and streaming callbacks all fan out from
-        here."""
+        list, latency stamp, deadline accounting, stream queues, and
+        streaming callbacks all fan out from here."""
         req.out.append(tok)
-        req.token_ts.append(time.perf_counter())
+        ts = self.clock()
+        req.token_ts.append(ts)
+        if len(req.out) == 1 and req.deadline is not None:
+            if ts > req.deadline:
+                self.metrics.deadline_misses += 1
+            else:
+                self.metrics.deadline_hits += 1
+        for q in self._streams.get(req, ()):
+            q.put(tok)
         for cb in tuple(self._callbacks.get(req, ())):
             cb(tok)
 
     def _retire(self, req: Request):
         req.done = True
         self._callbacks.pop(req, None)
+        for q in self._streams.pop(req, ()):
+            q.put(_STREAM_DONE)
+
+    def _subscribe(self, req: Request) -> queue.SimpleQueue:
+        """Open a token stream over ``req``: a fresh queue preloaded (under
+        the lock) with everything already emitted, then fed by ``_emit``
+        and closed with the sentinel by ``_retire`` — so a late subscriber
+        replays the backlog and no token is ever missed or duplicated."""
+        with self._lock:
+            q = queue.SimpleQueue()
+            for tok in req.out:
+                q.put(tok)
+            if req.done:
+                q.put(_STREAM_DONE)
+            else:
+                self._streams.setdefault(req, []).append(q)
+            return q
 
     # --- prefix cache ---------------------------------------------------
     def _match_prefix(self, req: Request):
@@ -621,17 +735,37 @@ class Engine:
 
     # --- public API -----------------------------------------------------
     def submit(self, req: Request, *, on_token=None) -> RequestHandle:
-        """Submit one request; the returned handle is truthy iff the
-        request was admitted immediately (falsy = no free slot, or — paged
-        — the block pool is short; the request is NOT queued).  Long
-        prompts under ``prefill_chunk`` start a chunked admission that
-        ``step()`` advances one chunk per tick.  ``on_token`` fires
-        synchronously for every emitted token."""
-        self._validate(req)
-        if req.submit_ts is None:
-            req.submit_ts = time.perf_counter()
-        handle = RequestHandle(self, req, on_token=on_token)
-        handle._admitted = self._admit_handle(handle)
+        """Submit one request; thread-safe.  The returned handle is truthy
+        iff the request was admitted immediately.  On backpressure (no
+        free slot, or — paged — the block pool is short): with the
+        background loop running the request is left QUEUED on the
+        scheduler and the loop admits it in priority order as capacity
+        frees (the falsy handle still streams); without the loop it is
+        NOT queued — retry, or hand it to ``serve()``.  Long prompts under
+        ``prefill_chunk`` start a chunked admission that ``step()``
+        advances one chunk per tick.  ``on_token`` fires synchronously
+        for every emitted token."""
+        with self._lock:
+            self._validate(req)
+            if req.submit_ts is None:
+                req.submit_ts = self.clock()
+            handle = RequestHandle(self, req, on_token=on_token)
+            if self.running:
+                # loop mode: register the callback for the whole queued
+                # lifetime (the loop admits later, off this thread) and
+                # fall back to the scheduler instead of dropping the
+                # request on backpressure
+                if on_token is not None:
+                    cbs = self._callbacks.setdefault(req, [])
+                    if on_token not in cbs:
+                        cbs.append(on_token)
+                handle._admitted = self._try_admit(req)
+                if not handle._admitted and not req.done \
+                        and not self.scheduler.queued(req):
+                    self.scheduler.push(req)
+            else:
+                handle._admitted = self._admit_handle(handle)
+        self._loop_wake.set()
         return handle
 
     def _admit_handle(self, handle: RequestHandle) -> bool:
@@ -640,22 +774,23 @@ class Engine:
         attempt (the prefill emits the first token synchronously) and
         unregistered again on failure, so an abandoned falsy handle leaks
         nothing onto later requests."""
-        req, cb = handle.req, handle._on_token
-        if req.done:
-            return False                  # finished/cancelled: nothing to
-        if cb is not None:                # admit, nothing to register
-            cbs = self._callbacks.setdefault(req, [])
-            if cb not in cbs:             # idempotent: a backpressured
-                cbs.append(cb)            # submit retried with the same
-            # callback must not double-fire per token
-        admitted = self._try_admit(req)
-        if not admitted and cb is not None:
-            cbs = self._callbacks.get(req, [])
-            if cb in cbs:
-                cbs.remove(cb)
-            if not cbs:
-                self._callbacks.pop(req, None)
-        return admitted
+        with self._lock:
+            req, cb = handle.req, handle._on_token
+            if req.done:
+                return False              # finished/cancelled: nothing to
+            if cb is not None:            # admit, nothing to register
+                cbs = self._callbacks.setdefault(req, [])
+                if cb not in cbs:         # idempotent: a backpressured
+                    cbs.append(cb)        # submit retried with the same
+                # callback must not double-fire per token
+            admitted = self._try_admit(req)
+            if not admitted and cb is not None:
+                cbs = self._callbacks.get(req, [])
+                if cb in cbs:
+                    cbs.remove(cb)
+                if not cbs:
+                    self._callbacks.pop(req, None)
+            return admitted
 
     def _try_admit(self, req: Request) -> bool:
         """One admission attempt, sharing the scheduler's state.
@@ -725,27 +860,58 @@ class Engine:
         found nowhere (mid-admission emit — e.g. an ``on_token`` callback
         cancelling its own request — or never admitted) is marked done;
         the admission paths check ``req.done`` after every emit and
-        release the slot themselves.  False if already finished."""
-        if req.done:
-            return False
-        if self.scheduler.remove(req):
-            self._finish_cancel(req)
-            return True
-        for cp in self._chunked:
-            if cp.req is req:
-                self._chunked.remove(cp)
-                self._free_slot(cp.slot)
+        release the slot themselves.  False if already finished.  Safe
+        from any thread: the whole teardown runs under the engine lock,
+        atomically with respect to the loop's tick."""
+        with self._lock:
+            if req.done:
+                return False
+            if self.scheduler.remove(req):
                 self._finish_cancel(req)
                 return True
-        if self.active.get(req.rid) is req:
+            for cp in self._chunked:
+                if cp.req is req:
+                    self._chunked.remove(cp)
+                    self._free_slot(cp.slot)
+                    self._finish_cancel(req)
+                    return True
+            if self.active.get(req.rid) is req:
+                del self.active[req.rid]
+                for s, r in enumerate(self.slots):
+                    if r is req:
+                        self._free_slot(s)
+                        break
+                self._finish_cancel(req)
+                return True
+            self._finish_cancel(req)
+            return True
+
+    def preempt(self, req: Request) -> bool:
+        """Kick an ACTIVE request off its slot and requeue it: the slot
+        and its reservation are released through the same exact-accounting
+        teardown as :meth:`cancel`, the tokens emitted so far are folded
+        into the prompt, and the request goes back on the scheduler — its
+        re-admission re-prefills the extended prompt, so the continued
+        greedy stream is token-identical to never having been preempted
+        (pinned; sampled streams restart their per-token step counter at
+        the new prefill boundary).  False if the request is not actively
+        decoding (queued/staged requests hold no decode slot worth
+        stealing) or the extended prompt would not fit ``max_seq``."""
+        with self._lock:
+            if req.done or self.active.get(req.rid) is not req:
+                return False
+            if len(req.prompt) + len(req.out) > self.max_seq - 1:
+                return False       # nothing left to decode after requeue
             del self.active[req.rid]
             for s, r in enumerate(self.slots):
                 if r is req:
                     self._free_slot(s)
                     break
-            self._finish_cancel(req)
-            return True
-        self._finish_cancel(req)
+            self.scheduler.clear_stall(req.rid)
+            req.prompt = list(req.prompt) + list(req.out)
+            self.scheduler.push(req)
+            self.metrics.preemptions += 1
+        self._loop_wake.set()
         return True
 
     def _finish_cancel(self, req: Request):
@@ -786,12 +952,12 @@ class Engine:
             slot_ids = jnp.asarray([slots[i] for i in idxs])
             tables = self.backend.admission_tables([slots[i] for i in idxs])
             rids = jnp.asarray([reqs[i].rid for i in idxs], jnp.int32)
-            t0 = time.perf_counter()
+            t0 = self.clock()
             nxt, self.caches = self._prefill(
                 self.params, jnp.asarray(toks), self.caches,
                 jnp.asarray(last), slot_ids, tables, rids, self.key)
             nxt = np.asarray(nxt)          # sync for honest wall-clock
-            self.metrics.prefill_s += time.perf_counter() - t0
+            self.metrics.prefill_s += self.clock() - t0
             self.metrics.prefill_calls += 1
             for j, i in enumerate(idxs):
                 req, slot = reqs[i], slots[i]
@@ -860,7 +1026,7 @@ class Engine:
             else remaining
         if cp.capture_at is not None and cp.consumed < cp.capture_at:
             c = min(c, cp.capture_at - cp.consumed)
-        t0 = time.perf_counter()
+        t0 = self.clock()
         if remaining > c:
             toks = np.asarray(req.prompt[cp.consumed:cp.consumed + c],
                               np.int32)[None]
@@ -868,7 +1034,7 @@ class Engine:
                                           cp.staging, jnp.int32(cp.consumed))
             jax.block_until_ready(cp.staging)
             cp.consumed += c
-            self.metrics.prefill_s += time.perf_counter() - t0
+            self.metrics.prefill_s += self.clock() - t0
             self.metrics.prefill_tokens += c
             self.metrics.prefill_calls += 1
             if self.prefill_chunk is not None:
@@ -891,7 +1057,7 @@ class Engine:
             self.caches, slot_ids, tables, jnp.asarray([req.rid], jnp.int32),
             self.key)
         nxt = np.asarray(nxt)
-        self.metrics.prefill_s += time.perf_counter() - t0
+        self.metrics.prefill_s += self.clock() - t0
         self.metrics.prefill_tokens += remaining
         self.metrics.prefill_calls += 1
         if self.prefill_chunk is not None:
@@ -962,11 +1128,23 @@ class Engine:
 
     # --- decode ---------------------------------------------------------
     def step(self):
+        """One engine tick, under the engine lock — the public, thread-safe
+        spelling of :meth:`_tick` (safe to call even while the background
+        loop runs: ticks serialize on the lock)."""
+        with self._lock:
+            self._tick()
+
+    def _tick(self):
         """One engine tick: admit queued work into free slots, run at most
         one chunk of pending prefill, then every active slot advances one
         token at its own position (free or still-admitting rows compute
         masked garbage that is ignored — a mid-admission slot's garbage
-        writes are fully overwritten by its final staged-cache scatter)."""
+        writes are fully overwritten by its final staged-cache scatter).
+        Re-entrant (the lock is an RLock) and caller-agnostic: the
+        synchronous ``serve()``/``step()`` path and the background loop
+        both drive exactly this body, which is what pins loop-mode output
+        token-identical to sync output.  Callers MUST hold the engine
+        lock."""
         self._admit_pending()
         self._advance_chunked()
         if not self.active:
@@ -983,13 +1161,13 @@ class Engine:
                 n_active += 1
         tables = self.backend.decode_tables([cp.slot for cp in
                                              self._chunked])
-        t0 = time.perf_counter()
+        t0 = self.clock()
         nxt, self.caches = self._decode(
             self.decode_params, jnp.asarray(toks), self.caches,
             jnp.asarray(self.positions), tables, jnp.asarray(rids),
             jnp.asarray(steps), self.key)
         nxt = np.asarray(nxt)
-        self.metrics.decode_s += time.perf_counter() - t0
+        self.metrics.decode_s += self.clock() - t0
         self.metrics.ticks += 1
         self.metrics.occupancy_sum += n_active
         self.metrics.decode_tokens += n_active
@@ -1019,21 +1197,91 @@ class Engine:
         are queued — an invalid one raises here and nothing is enqueued
         (the persistent scheduler must never hold a request admission
         would reject forever)."""
-        for r in requests:
-            self._validate(r)
-        now = time.perf_counter()
-        for r in requests:
-            if r.submit_ts is None:
-                r.submit_ts = now
-            self.scheduler.push(r)
-        start = replace(self.metrics)
-        t0 = time.time()
+        with self._lock:
+            for r in requests:
+                self._validate(r)
+            now = self.clock()
+            for r in requests:
+                if r.submit_ts is None:
+                    r.submit_ts = now
+                self.scheduler.push(r)
+            start = replace(self.metrics)
+        t0 = self.clock()
         ticks = 0
         while (self.scheduler.pending or self.active or self._chunked) \
                 and ticks < max_ticks:
             self.step()
             ticks += 1
         stats = self.metrics.since(start).summary(self.max_batch)
-        stats.update({"wall_s": time.time() - t0, "ticks": ticks,
+        stats.update({"wall_s": self.clock() - t0, "ticks": ticks,
                       "done": all(r.done for r in requests)})
         return stats
+
+    # --- background serve loop ------------------------------------------
+    @property
+    def running(self) -> bool:
+        """True while the background serve loop thread is alive."""
+        t = self._loop_thread
+        return t is not None and t.is_alive()
+
+    def start(self) -> "Engine":
+        """Run the engine tick on a background daemon thread until
+        :meth:`stop`.  While running, ``submit()`` is the only client
+        surface needed: handles stream via :meth:`RequestHandle.tokens`
+        without anyone ticking the engine, and backpressured submits queue
+        on the scheduler instead of bouncing.  Idempotent (a second
+        ``start()`` on a running engine is a no-op); returns ``self`` so
+        ``eng = Engine(...).start()`` reads naturally."""
+        with self._lock:
+            if self.running:
+                return self
+            self._loop_stop.clear()
+            self._loop_wake.clear()
+            self._drain_on_stop = True
+            self._loop_thread = threading.Thread(
+                target=self._serve_loop, name="engine-serve-loop",
+                daemon=True)
+            self._loop_thread.start()
+        return self
+
+    def stop(self, drain: bool = True, timeout: float | None = None):
+        """Stop the background loop.  ``drain=True`` (default) keeps
+        ticking until every queued, staged, and active request has
+        finished before the thread exits — no token already submitted is
+        lost.  ``drain=False`` exits at the next tick boundary; unfinished
+        requests stay queued/active and a later ``start()``, ``serve()``
+        or ``step()`` resumes them exactly where they stopped (state is
+        only mutated under the lock, never torn down).  ``timeout`` bounds
+        the join; returns True if the thread exited in time."""
+        t = self._loop_thread
+        if t is None or not t.is_alive():
+            self._loop_thread = None
+            return True
+        self._drain_on_stop = drain
+        self._loop_stop.set()
+        self._loop_wake.set()
+        t.join(timeout)
+        alive = t.is_alive()
+        if not alive:
+            self._loop_thread = None
+        return not alive
+
+    def _serve_loop(self):
+        """Loop body: tick while there is work, sleep ``idle_backoff_s``
+        while there is none (a ``submit``/``cancel``/``preempt``/``stop``
+        wakes the sleep immediately).  Every tick runs under the engine
+        lock; between ticks the lock is released so client threads can
+        submit/cancel without waiting out a whole generation."""
+        backoff = max(self.config.idle_backoff_s, 1e-4)
+        while True:
+            with self._lock:
+                worked = not self.idle
+                if worked:
+                    self._tick()
+                drained = self.idle
+            if self._loop_stop.is_set() and (drained
+                                             or not self._drain_on_stop):
+                return
+            if not worked:
+                self._loop_wake.wait(backoff)
+                self._loop_wake.clear()

@@ -13,9 +13,18 @@ import numpy as np
 import pytest
 
 from repro.models.registry import get_config, get_model
+from repro.serve.config import EngineConfig
 from repro.serve.engine import Engine, Request
+
 from repro.serve.paged import BlockAllocator, blocks_needed
 from repro.serve.sampling import SamplingConfig, sample
+
+
+def _engine(cfg, params, **knobs):
+    """Engine built from knob kwargs (the legacy shim is gone: every
+    construction goes through an explicit EngineConfig)."""
+    return Engine(cfg, params, EngineConfig(**knobs))
+
 
 MIXED_LENS = (3, 9, 5, 17, 2)
 
@@ -38,7 +47,7 @@ def _sequential_reference(cfg, params, prompts, max_new, max_seq=48,
     per-request sampling streams line up."""
     outs = []
     for i, p in enumerate(prompts):
-        eng = Engine(cfg, params, max_batch=1, max_seq=max_seq,
+        eng = _engine(cfg, params, max_batch=1, max_seq=max_seq,
                      sampling=sampling, seed=seed)
         req = Request(rid=rids[i] if rids else i, prompt=p, max_new=max_new)
         assert eng.serve([req])["done"]
@@ -51,7 +60,7 @@ def test_mixed_length_batch_matches_sequential():
     mixed-depth slab) == each request served alone."""
     cfg, params = _setup()
     prompts = _prompts(cfg)
-    eng = Engine(cfg, params, max_batch=3, max_seq=48)
+    eng = _engine(cfg, params, max_batch=3, max_seq=48)
     reqs = [Request(rid=i, prompt=p, max_new=6)
             for i, p in enumerate(prompts)]
     stats = eng.serve(reqs)
@@ -66,7 +75,7 @@ def test_two_requests_different_lengths_concurrent():
     prompt lengths, token-identical to one-at-a-time serving."""
     cfg, params = _setup()
     p_short, p_long = [5, 6, 7], [9, 8, 7, 6, 5, 4, 3, 2, 1, 10, 11]
-    eng = Engine(cfg, params, max_batch=2, max_seq=48)
+    eng = _engine(cfg, params, max_batch=2, max_seq=48)
     reqs = [Request(rid=0, prompt=p_short, max_new=5),
             Request(rid=1, prompt=p_long, max_new=5)]
     assert eng.serve(reqs)["done"]
@@ -82,7 +91,7 @@ def test_mixed_length_batch_recurrent_families(arch):
     reference."""
     cfg, params = _setup(arch)
     prompts = _prompts(cfg, lens=(4, 7, 4))
-    eng = Engine(cfg, params, max_batch=2, max_seq=48)
+    eng = _engine(cfg, params, max_batch=2, max_seq=48)
     reqs = [Request(rid=i, prompt=p, max_new=4)
             for i, p in enumerate(prompts)]
     assert eng.serve(reqs)["done"]
@@ -112,7 +121,7 @@ def test_recurrent_chunked_prefill_matches_whole_prompt(arch):
                                   "block_size": 8}
     outs = {}
     for mode, kw in modes.items():
-        eng = Engine(cfg, params, max_batch=2, max_seq=32, **kw)
+        eng = _engine(cfg, params, max_batch=2, max_seq=32, **kw)
         reqs = [Request(rid=i, prompt=p, max_new=5)
                 for i, p in enumerate(prompts)]
         stats = eng.serve(reqs)
@@ -132,7 +141,7 @@ def test_hybrid_paged_matches_dense_mixed_lengths():
     prompts = _prompts(cfg)
     outs = {}
     for paged in (False, True):
-        eng = Engine(cfg, params, max_batch=3, max_seq=48, paged=paged,
+        eng = _engine(cfg, params, max_batch=3, max_seq=48, paged=paged,
                      block_size=8)
         reqs = [Request(rid=i, prompt=p, max_new=6)
                 for i, p in enumerate(prompts)]
@@ -155,7 +164,7 @@ def test_paged_matches_dense_mixed_lengths(arch):
     prompts = _prompts(cfg)
     outs = {}
     for paged in (False, True):
-        eng = Engine(cfg, params, max_batch=3, max_seq=48, paged=paged,
+        eng = _engine(cfg, params, max_batch=3, max_seq=48, paged=paged,
                      block_size=8)
         reqs = [Request(rid=i, prompt=p, max_new=6)
                 for i, p in enumerate(prompts)]
@@ -178,7 +187,7 @@ def test_chunked_prefill_matches_whole_prompt():
         "paged_chunked": {"prefill_chunk": 8, "paged": True,
                           "block_size": 8},
     }.items():
-        eng = Engine(cfg, params, max_batch=2, max_seq=32, **kw)
+        eng = _engine(cfg, params, max_batch=2, max_seq=32, **kw)
         reqs = [Request(rid=i, prompt=p, max_new=5)
                 for i, p in enumerate(prompts)]
         stats = eng.serve(reqs)
@@ -196,7 +205,7 @@ def test_chunked_prefill_interleaves_decode():
     on more than one chunk of prefill work."""
     cfg, params = _setup()
     rng = np.random.default_rng(4)
-    eng = Engine(cfg, params, max_batch=2, max_seq=48, prefill_chunk=8)
+    eng = _engine(cfg, params, max_batch=2, max_seq=48, prefill_chunk=8)
     short = Request(rid=0, prompt=[5, 6, 7], max_new=30)
     assert eng.submit(short)
     long = Request(rid=1,
@@ -226,7 +235,7 @@ def test_max_new_one_emits_exactly_one_token():
     slot must be free for the next request immediately."""
     cfg, params = _setup()
     for kw in ({}, {"paged": True, "block_size": 8}):
-        eng = Engine(cfg, params, max_batch=1, max_seq=48, **kw)
+        eng = _engine(cfg, params, max_batch=1, max_seq=48, **kw)
         req = Request(rid=0, prompt=[3, 1, 4], max_new=1)
         stats = eng.serve([req])
         assert stats["done"]
@@ -244,13 +253,13 @@ def test_prompt_at_max_seq_boundary():
     rng = np.random.default_rng(5)
     prompt = rng.integers(1, cfg.vocab_size, 31).tolist()
     for kw in ({}, {"paged": True, "block_size": 8}):
-        eng = Engine(cfg, params, max_batch=1, max_seq=32, **kw)
+        eng = _engine(cfg, params, max_batch=1, max_seq=32, **kw)
         req = Request(rid=0, prompt=prompt, max_new=8)
         stats = eng.serve([req])
         assert stats["done"]
         assert len(req.out) == 2             # prefill token + 1 decode step
     with pytest.raises(ValueError):          # max_seq-long prompt: rejected
-        Engine(cfg, params, max_batch=1, max_seq=32).submit(
+        _engine(cfg, params, max_batch=1, max_seq=32).submit(
             Request(rid=1, prompt=rng.integers(1, 9, 32).tolist()))
 
 
@@ -263,7 +272,7 @@ def test_slot_reuse_no_stale_state():
     long_p = rng.integers(1, cfg.vocab_size, 20).tolist()
     short_p = rng.integers(1, cfg.vocab_size, 4).tolist()
     for kw in ({}, {"paged": True, "block_size": 8}):
-        eng = Engine(cfg, params, max_batch=1, max_seq=48, **kw)
+        eng = _engine(cfg, params, max_batch=1, max_seq=48, **kw)
         first = Request(rid=0, prompt=long_p, max_new=6)
         assert eng.serve([first])["done"]
         second = Request(rid=1, prompt=short_p, max_new=6)
@@ -278,7 +287,7 @@ def test_paged_backpressure_full_pool():
     and still run to completion; submit() reports False meanwhile."""
     cfg, params = _setup()
     prompts = _prompts(cfg, lens=(5, 4, 6))
-    eng = Engine(cfg, params, max_batch=3, max_seq=48, paged=True,
+    eng = _engine(cfg, params, max_batch=3, max_seq=48, paged=True,
                  block_size=8, num_blocks=3)      # 2 usable blocks
     reqs = [Request(rid=i, prompt=p, max_new=6)
             for i, p in enumerate(prompts)]
@@ -293,7 +302,7 @@ def test_paged_backpressure_full_pool():
 
 def test_submit_on_full_engine():
     cfg, params = _setup()
-    eng = Engine(cfg, params, max_batch=1, max_seq=48)
+    eng = _engine(cfg, params, max_batch=1, max_seq=48)
     assert eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new=8))
     assert not eng.submit(Request(rid=1, prompt=[4, 5], max_new=2))
 
@@ -304,10 +313,10 @@ def test_paged_rejects_ssm_and_oversized():
     family); oversized block demands are rejected at submit."""
     cfg, params = _setup("mamba2-1.3b")
     with pytest.raises(ValueError, match="paged"):
-        Engine(cfg, params, max_batch=1, max_seq=32, paged=True)
-    Engine(cfg, params, max_batch=1, max_seq=32, prefill_chunk=8)  # ok now
+        _engine(cfg, params, max_batch=1, max_seq=32, paged=True)
+    _engine(cfg, params, max_batch=1, max_seq=32, prefill_chunk=8)  # ok now
     cfg2, params2 = _setup()
-    eng = Engine(cfg2, params2, max_batch=1, max_seq=64, paged=True,
+    eng = _engine(cfg2, params2, max_batch=1, max_seq=64, paged=True,
                  block_size=8, num_blocks=4)
     with pytest.raises(ValueError):          # needs more blocks than exist
         eng.submit(Request(rid=0, prompt=list(range(1, 40)), max_new=16))
@@ -340,7 +349,7 @@ def test_sampled_mixed_batch_matches_sequential(mode, kw):
     cfg, params = _setup()
     prompts = _prompts(cfg)
     sc = SamplingConfig(mode=mode, **kw)
-    eng = Engine(cfg, params, max_batch=3, max_seq=48, sampling=sc, seed=11)
+    eng = _engine(cfg, params, max_batch=3, max_seq=48, sampling=sc, seed=11)
     reqs = [Request(rid=i, prompt=p, max_new=6)
             for i, p in enumerate(prompts)]
     assert eng.serve(reqs)["done"]
@@ -358,7 +367,7 @@ def test_sampling_determinism_fixed_key():
     sc = SamplingConfig(mode="top_k", top_k=8, temperature=0.7)
 
     def run(seed):
-        eng = Engine(cfg, params, max_batch=3, max_seq=48,
+        eng = _engine(cfg, params, max_batch=3, max_seq=48,
                      sampling=sc, seed=seed)
         reqs = [Request(rid=i, prompt=p, max_new=8)
                 for i, p in enumerate(prompts)]
@@ -420,7 +429,7 @@ def test_engine_metrics_and_bucketing():
     metrics account every token."""
     cfg, params = _setup()
     prompts = _prompts(cfg, lens=(3, 5, 4, 6))   # all in one 16-bucket
-    eng = Engine(cfg, params, max_batch=4, max_seq=48, prefill_bucket=16)
+    eng = _engine(cfg, params, max_batch=4, max_seq=48, prefill_bucket=16)
     reqs = [Request(rid=i, prompt=p, max_new=3)
             for i, p in enumerate(prompts)]
     stats = eng.serve(reqs)
@@ -435,18 +444,18 @@ def test_engine_metrics_and_bucketing():
 
 def test_engine_rejects_oversized_prompt():
     cfg, params = _setup()
-    eng = Engine(cfg, params, max_batch=2, max_seq=16)
+    eng = _engine(cfg, params, max_batch=2, max_seq=16)
     with pytest.raises(ValueError):
         eng.submit(Request(rid=0, prompt=list(range(1, 17)), max_new=2))
     with pytest.raises(ValueError):
-        Engine(cfg, params, max_batch=2, max_seq=16, prefill_bucket=0)
+        _engine(cfg, params, max_batch=2, max_seq=16, prefill_bucket=0)
 
 
 def test_engine_reuse_reports_per_call_stats():
     """serve() stats cover that call only; Engine.metrics keeps the
     lifetime totals."""
     cfg, params = _setup()
-    eng = Engine(cfg, params, max_batch=2, max_seq=48)
+    eng = _engine(cfg, params, max_batch=2, max_seq=48)
     p = _prompts(cfg, lens=(3, 5))
     s1 = eng.serve([Request(rid=0, prompt=p[0], max_new=4),
                     Request(rid=1, prompt=p[1], max_new=4)])

@@ -15,9 +15,18 @@ import numpy as np
 import pytest
 
 from repro.models.registry import get_config, get_model
+from repro.serve.config import EngineConfig
 from repro.serve.engine import Engine, Request
+
 from repro.serve.paged import BlockAllocator
 from repro.serve.prefix_cache import PrefixCache
+
+
+def _engine(cfg, params, **knobs):
+    """Engine built from knob kwargs (the legacy shim is gone: every
+    construction goes through an explicit EngineConfig)."""
+    return Engine(cfg, params, EngineConfig(**knobs))
+
 
 
 def _setup(arch="yi-9b", **over):
@@ -129,10 +138,10 @@ def test_warm_transformer_paged_matches_cold(kw):
     and without chunked prefill composing."""
     cfg, params = _setup()
     prompts = _shared_head_prompts(cfg)
-    cold = Engine(cfg, params, max_batch=2, max_seq=48, paged=True,
+    cold = _engine(cfg, params, max_batch=2, max_seq=48, paged=True,
                   block_size=8, **kw)
     ref = _serve_each(cold, prompts)
-    warm = Engine(cfg, params, max_batch=2, max_seq=48, paged=True,
+    warm = _engine(cfg, params, max_batch=2, max_seq=48, paged=True,
                   block_size=8, prefix_cache=True, **kw)
     outs = _serve_each(warm, prompts)
     assert outs == ref
@@ -149,9 +158,9 @@ def test_warm_mamba2_matches_cold(kw):
     cfg, params = _setup("mamba2-1.3b")
     prompts = _shared_head_prompts(cfg)
     prompts.append(prompts[0] + [7, 8, 9])    # strict prefix extension
-    cold = Engine(cfg, params, max_batch=2, max_seq=48, **kw)
+    cold = _engine(cfg, params, max_batch=2, max_seq=48, **kw)
     ref = _serve_each(cold, prompts, max_new=4)
-    warm = Engine(cfg, params, max_batch=2, max_seq=48, prefix_cache=True,
+    warm = _engine(cfg, params, max_batch=2, max_seq=48, prefix_cache=True,
                   **kw)
     outs = _serve_each(warm, prompts, max_new=4)
     assert outs == ref
@@ -167,10 +176,10 @@ def test_warm_zamba2_paged_matches_cold(kw):
     block-aligned boundary."""
     cfg, params = _setup("zamba2-1.2b")
     prompts = _shared_head_prompts(cfg)
-    cold = Engine(cfg, params, max_batch=2, max_seq=48, paged=True,
+    cold = _engine(cfg, params, max_batch=2, max_seq=48, paged=True,
                   block_size=8, **kw)
     ref = _serve_each(cold, prompts, max_new=4)
-    warm = Engine(cfg, params, max_batch=2, max_seq=48, paged=True,
+    warm = _engine(cfg, params, max_batch=2, max_seq=48, paged=True,
                   block_size=8, prefix_cache=True, **kw)
     outs = _serve_each(warm, prompts, max_new=4)
     assert outs == ref
@@ -194,10 +203,10 @@ def test_warm_two_prefix_families_sequential(kw):
                head_a + rng.integers(1, cfg.vocab_size, 5).tolist(),
                head_b + rng.integers(1, cfg.vocab_size, 6).tolist(),
                head_b + rng.integers(1, cfg.vocab_size, 5).tolist()]
-    cold = Engine(cfg, params, max_batch=2, max_seq=48, paged=True,
+    cold = _engine(cfg, params, max_batch=2, max_seq=48, paged=True,
                   block_size=8, **kw)
     ref = _serve_each(cold, prompts)
-    warm = Engine(cfg, params, max_batch=2, max_seq=48, paged=True,
+    warm = _engine(cfg, params, max_batch=2, max_seq=48, paged=True,
                   block_size=8, prefix_cache=True, **kw)
     outs = _serve_each(warm, prompts)
     assert outs == ref
@@ -210,7 +219,7 @@ def test_shared_blocks_never_written_in_place():
     bit-identical before and after a warm admission prefills + decodes."""
     cfg, params = _setup()
     prompts = _shared_head_prompts(cfg, tails=(6, 5))
-    eng = Engine(cfg, params, max_batch=2, max_seq=48, paged=True,
+    eng = _engine(cfg, params, max_batch=2, max_seq=48, paged=True,
                  block_size=8, prefix_cache=True)
     _serve_each(eng, prompts[:1])
     hit = eng.prefix_cache.match(prompts[1], max_len=len(prompts[1]) - 1)
@@ -238,10 +247,10 @@ def test_eviction_under_pool_pressure_keeps_serving():
     rng = np.random.default_rng(7)
     prompts = [rng.integers(1, cfg.vocab_size, 24).tolist()
                for _ in range(3)]             # disjoint: each caches 3 blocks
-    cold = Engine(cfg, params, max_batch=1, max_seq=48, paged=True,
+    cold = _engine(cfg, params, max_batch=1, max_seq=48, paged=True,
                   block_size=8, num_blocks=8)
     ref = _serve_each(cold, prompts, max_new=4)
-    warm = Engine(cfg, params, max_batch=1, max_seq=48, paged=True,
+    warm = _engine(cfg, params, max_batch=1, max_seq=48, paged=True,
                   block_size=8, num_blocks=8, prefix_cache=True)
     outs = _serve_each(warm, prompts, max_new=4)
     assert outs == ref
@@ -256,12 +265,12 @@ def test_eviction_under_pool_pressure_keeps_serving():
 def test_prefix_cache_construction_contract():
     cfg, params = _setup()
     with pytest.raises(ValueError, match="prefix_cache"):
-        Engine(cfg, params, max_batch=1, max_seq=32, prefix_cache=True)
+        _engine(cfg, params, max_batch=1, max_seq=32, prefix_cache=True)
     cfg_h, params_h = _setup("zamba2-1.2b")
     with pytest.raises(ValueError, match="prefix_cache"):
-        Engine(cfg_h, params_h, max_batch=1, max_seq=32, prefix_cache=True)
+        _engine(cfg_h, params_h, max_batch=1, max_seq=32, prefix_cache=True)
     cfg_s, params_s = _setup("mamba2-1.3b")
-    Engine(cfg_s, params_s, max_batch=1, max_seq=32, prefix_cache=True)
+    _engine(cfg_s, params_s, max_batch=1, max_seq=32, prefix_cache=True)
 
 
 def test_warm_metrics_accounting():
@@ -269,7 +278,7 @@ def test_warm_metrics_accounting():
     accounted separately (their sum is the full prompt)."""
     cfg, params = _setup("mamba2-1.3b")
     p1 = _shared_head_prompts(cfg, tails=(6,))[0]
-    eng = Engine(cfg, params, max_batch=1, max_seq=48, prefix_cache=True)
+    eng = _engine(cfg, params, max_batch=1, max_seq=48, prefix_cache=True)
     _serve_each(eng, [p1], max_new=3)
     base = eng.metrics.prefill_tokens
     r = Request(rid=9, prompt=p1 + [3, 1, 4], max_new=3)
@@ -296,7 +305,7 @@ def test_warm_concurrent_workload_parity_slow(arch, kw):
     prompts = _shared_head_prompts(cfg, head_len=24, tails=(6, 5, 7, 9, 4, 8))
     outs = {}
     for warm in (False, True):
-        eng = Engine(cfg, params, max_batch=3, max_seq=64,
+        eng = _engine(cfg, params, max_batch=3, max_seq=64,
                      prefix_cache=warm, **kw)
         reqs = [Request(rid=i, prompt=p, max_new=5)
                 for i, p in enumerate(prompts)]

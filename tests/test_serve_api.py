@@ -1,9 +1,9 @@
-"""Serving API v2: EngineConfig, deprecation shim, request lifecycle.
+"""Serving API v2: EngineConfig, request lifecycle, scheduler bounds.
 
 The load-bearing pins:
-  * legacy ``Engine(cfg, params, **knobs)`` warns ``DeprecationWarning``
-    once and produces a token-identical engine to the ``EngineConfig``
-    path;
+  * legacy ``Engine(cfg, params, **knobs)`` is GONE — the one-release
+    deprecation window closed, so knob kwargs now raise ``TypeError``
+    and every construction goes through ``EngineConfig``;
   * incremental tokens from a ``RequestHandle`` (generator AND on-token
     callback) equal the final ``req.out`` exactly;
   * ``cancel()`` releases blocks and staged state mid-chunked-prefill and
@@ -100,37 +100,27 @@ def test_engine_config_from_args():
     assert c2.max_batch == 8 and not c2.paged and c2.prefill_chunk is None
 
 
-def test_legacy_kwargs_warn_once_and_match_config_path():
-    """Satellite pin: legacy kwargs -> exactly one DeprecationWarning and a
-    token-identical engine to the EngineConfig construction."""
+def test_legacy_kwargs_shim_removed():
+    """Satellite pin: the pre-v2 ``Engine(cfg, params, **knobs)`` shim is
+    gone — knob kwargs raise ``TypeError`` (no silent acceptance, no
+    DeprecationWarning path left), the shim helper no longer exists, and
+    the ``EngineConfig`` construction still works and serves."""
     cfg, params = _setup()
-    rng = np.random.default_rng(0)
-    prompts = [rng.integers(1, cfg.vocab_size, n).tolist() for n in (5, 9)]
-    knobs = dict(max_batch=2, max_seq=48, paged=True, block_size=8, seed=3)
-
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        legacy = Engine(cfg, params, **knobs)
-    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
-    assert len(dep) == 1
-    assert "EngineConfig" in str(dep[0].message)
-
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        v2 = Engine(cfg, params, EngineConfig(**knobs))
-    assert not [w for w in rec if issubclass(w.category, DeprecationWarning)]
-
-    for eng in (legacy, v2):
-        reqs = [Request(rid=i, prompt=p, max_new=5)
-                for i, p in enumerate(prompts)]
-        assert eng.serve(reqs)["done"]
-        eng._outs = [r.out for r in reqs]
-    assert legacy._outs == v2._outs
-
-    with pytest.raises(TypeError):            # both config and kwargs
+    with pytest.raises(TypeError):
+        Engine(cfg, params, max_batch=2)
+    with pytest.raises(TypeError):
         Engine(cfg, params, EngineConfig(), max_batch=2)
-    with pytest.raises(TypeError):            # unknown legacy kwarg
+    with pytest.raises(TypeError):
         Engine(cfg, params, bogus_knob=1)
+    import repro.serve.config as config_mod
+    assert not hasattr(config_mod, "config_from_legacy_kwargs")
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        eng = Engine(cfg, params, EngineConfig(max_batch=2, max_seq=48,
+                                               paged=True, block_size=8))
+    assert not [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    req = Request(rid=0, prompt=[3, 4, 5], max_new=4)
+    assert eng.serve([req])["done"] and len(req.out) == 4
 
 
 def test_engine_module_is_substrate_blind():

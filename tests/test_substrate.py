@@ -269,11 +269,12 @@ def test_pipeline_matches_sequential():
 
 @pytest.mark.slow
 def test_engine_serves_batched_requests():
+    from repro.serve.config import EngineConfig
     from repro.serve.engine import Engine, Request
     cfg = get_config("yi-9b").reduced()
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = Engine(cfg, params, max_batch=4, max_seq=64)
+    eng = Engine(cfg, params, EngineConfig(max_batch=4, max_seq=64))
     reqs = [Request(rid=i, prompt=[1 + i, 2, 3], max_new=5)
             for i in range(6)]   # 6 requests > 4 slots: tests slot reuse
     stats = eng.serve(reqs)
@@ -285,14 +286,15 @@ def test_engine_serves_batched_requests():
 
 def test_engine_decode_consistency():
     """Engine slab decode == single-request decode for the same prompt."""
+    from repro.serve.config import EngineConfig
     from repro.serve.engine import Engine, Request
     cfg = get_config("yi-9b").reduced(dtype="float32", attn_impl="full")
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(1))
-    eng = Engine(cfg, params, max_batch=2, max_seq=32)
+    eng = Engine(cfg, params, EngineConfig(max_batch=2, max_seq=32))
     r1 = Request(rid=0, prompt=[5, 6, 7], max_new=4)
     eng.serve([r1])
-    eng2 = Engine(cfg, params, max_batch=1, max_seq=32)
+    eng2 = Engine(cfg, params, EngineConfig(max_batch=1, max_seq=32))
     r2 = Request(rid=1, prompt=[5, 6, 7], max_new=4)
     eng2.serve([r2])
     assert r1.out == r2.out
