@@ -112,21 +112,37 @@ def check_latency_order(current: dict) -> list[str]:
 def check_quant_section(current: dict) -> list[str]:
     """Absolute presence gate on the ``quant`` section: the frozen-4-bit
     decode scenario must report a positive decode tok/s for every mode
-    (bf16 baseline + lut4 + int4).  CPU wall-clock ratios between modes are
-    too noisy to gate; what must never happen silently is the quantized
-    decode path dropping out of the bench entirely."""
+    (bf16 baseline + affine lut4/int4 + non-affine nf4/nf4p).  CPU
+    wall-clock ratios between modes are too noisy to gate; what must never
+    happen silently is a quantized decode path dropping out of the bench.
+    The pruned-residual row (nf4p) must additionally report its
+    residual-table bytes saved (positive — pruning that saves nothing is a
+    regression) and the bounded decode-weight MAE delta vs unpruned nf4."""
     q = current.get("quant")
     if not q:
         return ["quant: section missing from the current run "
                 "(quant_decode_modes scenario dropped?)"]
     fails = []
-    for mode in ("bf16", "lut4", "int4"):
+    for mode in ("bf16", "lut4", "int4", "nf4", "nf4p"):
         row = q.get(mode)
         tok_s = row.get("decode_tok_s") if isinstance(row, dict) else None
         if tok_s is None:
             fails.append(f"quant.{mode}: decode_tok_s missing")
         elif tok_s <= 0:
             fails.append(f"quant.{mode}: decode_tok_s {tok_s} not positive")
+    nf4p = q.get("nf4p")
+    if isinstance(nf4p, dict):
+        saved = nf4p.get("table_bytes_saved")
+        if saved is None:
+            fails.append("quant.nf4p: table_bytes_saved missing")
+        elif saved <= 0:
+            fails.append(f"quant.nf4p: table_bytes_saved {saved} "
+                         "not positive (pruning saved nothing)")
+        mae = nf4p.get("mae_delta")
+        if mae is None:
+            fails.append("quant.nf4p: mae_delta missing")
+        elif not mae >= 0:
+            fails.append(f"quant.nf4p: mae_delta {mae} invalid")
     return fails
 
 

@@ -116,15 +116,19 @@ def decode_paged_vs_dense(quant: str = "bf16", batch: int = 8,
 
 
 def quant_decode_modes(batch: int = 4, ticks: int = 12, max_seq: int = 64,
-                       modes=("bf16", "lut4", "int4")) -> dict:
+                       modes=("bf16", "lut4", "int4", "nf4", "nf4p")) -> dict:
     """Steady-state decode tok/s per weight-quantization mode, same
     scenario (the ``quant`` section of ``BENCH_engine.json``).
 
     ``bf16`` is the dense baseline; ``lut4`` evaluates frozen 4-bit codes
     through the D&C sub-table LUT gemm; ``int4`` direct-dequants the same
-    codes (identical tokens, conventional evaluation).  Decode is
-    memory-bound on real accelerators, so 4-bit weights approach a direct
-    tok/s win there; CPU-interpreted numbers only track relative shape.
+    codes (identical tokens, conventional evaluation); ``nf4`` encodes
+    against the non-affine NF4 codebook and adds the least-squares
+    residual correction to the 6-select sum; ``nf4p`` prunes that residual
+    sub-table (its row also reports the residual table bytes saved and the
+    decode-weight MAE delta vs unpruned nf4).  Decode is memory-bound on
+    real accelerators, so 4-bit weights approach a direct tok/s win there;
+    CPU-interpreted numbers only track relative shape.
     """
     rows = {}
     for mode in modes:
@@ -137,7 +141,38 @@ def quant_decode_modes(batch: int = 4, ticks: int = 12, max_seq: int = 64,
         ratio = rows[mode]["decode_tok_s"] / max(
             rows["bf16"]["decode_tok_s"], 1e-9)
         print(f"engine_quant_{mode}_vs_bf16,0,tok_s_ratio={ratio:.2f}")
+    if "nf4p" in rows:
+        rows["nf4p"].update(_nf4p_prune_stats())
+        print(f"engine_quant_nf4p_residual_table,0,"
+              f"bytes_saved={rows['nf4p']['table_bytes_saved']};"
+              f"mae_delta={rows['nf4p']['mae_delta']:.4f}")
     return rows
+
+
+def _nf4p_prune_stats() -> dict:
+    """Residual-table bytes saved by pruning, and the decode-weight MAE
+    delta it costs vs the unpruned nf4 reconstruction (gated by
+    ``compare.check_quant_section``)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.lut import (NF4_CODEBOOK, dc_decompose_codebook,
+                                prune_residual, residual_table_bytes)
+    from repro.core.quant import NF4P_PRUNE_THRESHOLD, quantize_weight
+    from repro.kernels.lut_gemm.ops import quantized_matmul
+
+    _, _, residual = dc_decompose_codebook(jnp.asarray(NF4_CODEBOOK))
+    kept_idx, _ = prune_residual(residual, NF4P_PRUNE_THRESHOLD)
+    dense, pruned = residual_table_bytes(int(kept_idx.shape[0]))
+    w = jax.random.normal(jax.random.PRNGKey(7), (128, 64), jnp.float32)
+    eye = jnp.eye(w.shape[0], dtype=jnp.float32)   # W_hat = I @ W_hat
+    w_nf4 = quantized_matmul(eye, quantize_weight(w, "nf4_dc"))
+    w_nf4p = quantized_matmul(
+        eye, quantize_weight(w, "nf4_dc", NF4P_PRUNE_THRESHOLD))
+    mae_delta = float(jnp.abs(w_nf4p - w_nf4).mean())
+    return {"table_bytes_saved": dense - pruned,
+            "residual_kept": int(kept_idx.shape[0]),
+            "mae_delta": mae_delta}
 
 
 def prefill_batched_vs_per_row(quant: str = "bf16", batch: int = 8,

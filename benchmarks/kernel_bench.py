@@ -56,16 +56,20 @@ def lut_gemm_vs_dense_sweep(shapes=((8, 256, 512), (8, 512, 512),
                                     (128, 256, 512))) -> dict:
     """Decode-shape sweep: dense jnp.dot vs the D&C sub-table LUT gemm vs
     the full-codebook kernel (6 vs 15 selects per tile — the paper's ~3.7x
-    LUT-area split at the GEMM level).
+    LUT-area split at the GEMM level), plus the residual-corrected
+    non-affine path (nf4 D&C = 6 selects + one per-code residual gather)
+    against the affine 6-select baseline, so the residual epilogue's
+    overhead is visible per shape.
 
     The jnp D&C path is what the serving engine runs on the decode hot
-    path (``EngineConfig(quant="lut4")``); the Pallas kernels are timed in
-    interpret mode, so their numbers track structure (weight bytes moved:
-    4-bit codes vs 16-bit floats), not real TPU wall-clock.
+    path (``EngineConfig(quant="lut4"|"nf4")``); the Pallas kernels are
+    timed in interpret mode, so their numbers track structure (weight
+    bytes moved: 4-bit codes vs 16-bit floats), not real TPU wall-clock.
     """
     from repro.core.quant import quantize_weight
     from repro.kernels.lut_gemm.ops import (lut4_matmul_kernel,
                                             nf4_matmul_kernel,
+                                            nf4dc_matmul_kernel,
                                             quantized_matmul)
     rng = np.random.default_rng(1)
     out = {}
@@ -73,19 +77,29 @@ def lut_gemm_vs_dense_sweep(shapes=((8, 256, 512), (8, 512, 512),
         x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
         w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
         qw = quantize_weight(w, "lut_dc")
+        qw_nf4 = quantize_weight(w, "nf4_dc")
         us_dense = _bench(lambda: x @ w)
         us_jnp = _bench(lambda: quantized_matmul(x, qw))
         us_dc = _bench(lambda: lut4_matmul_kernel(x, w, interpret=True))
         us_full = _bench(lambda: nf4_matmul_kernel(x, w, interpret=True))
+        us_nf4_jnp = _bench(lambda: quantized_matmul(x, qw_nf4))
+        us_nf4_dc = _bench(lambda: nf4dc_matmul_kernel(x, w, interpret=True))
         wbytes_dense = k * n * 2                       # bf16 weights
         wbytes_lut = k * n // 2 + n * 8                # 4-bit codes + scales
         tag = f"m{m}_k{k}_n{n}"
         out[tag] = {"dense_us": us_dense, "lut_dc_jnp_us": us_jnp,
-                    "lut_dc_pallas_us": us_dc, "lut_full_pallas_us": us_full}
+                    "lut_dc_pallas_us": us_dc, "lut_full_pallas_us": us_full,
+                    "nf4_dc_jnp_us": us_nf4_jnp,
+                    "nf4_dc_pallas_us": us_nf4_dc,
+                    "residual_overhead": us_nf4_dc / max(us_dc, 1e-9)}
         print(f"lut_gemm_sweep_{tag},{us_jnp:.0f},dense_us={us_dense:.0f};"
               f"dc_pallas_us={us_dc:.0f};full_pallas_us={us_full:.0f};"
               f"weight_bytes={wbytes_lut}_vs_{wbytes_dense};"
               f"selects=6_vs_15")
+        print(f"lut_gemm_sweep_nf4_{tag},{us_nf4_jnp:.0f},"
+              f"nf4_dc_pallas_us={us_nf4_dc:.0f};"
+              f"residual_vs_affine={us_nf4_dc / max(us_dc, 1e-9):.2f}x;"
+              f"selects=6+res_vs_6")
     return out
 
 

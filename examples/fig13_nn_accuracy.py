@@ -2,13 +2,21 @@
 multiplier mode (QAT via STE) and compare final task MAE — the paper's
 "separate neural networks for each method" experiment.
 
-Extended with the serving-side PTQ column: the bf16-trained ("ideal") net
+Extended with the serving-side PTQ columns: the bf16-trained ("ideal") net
 re-evaluated with its weights frozen to 4-bit ``QuantizedWeight`` leaves —
-exactly what ``EngineConfig(quant="lut4"|"int4")`` does to decode
-projections.  Both evaluation strategies (D&C sub-table LUT vs direct
-dequant) reconstruct the same affine grid, so their MAE is identical; the
-documented accuracy bound (see docs/quantization.md) is
-``MAE(ptq) <= PTQ_MAE_BOUND * MAE(ideal)``.
+exactly what ``EngineConfig(quant=...)`` does to decode projections.
+
+* affine pair (``lut4`` vs ``int4``): both reconstruct the same uniform
+  grid, so their MAE is identical; documented bound
+  ``MAE(ptq) <= PTQ_MAE_BOUND * MAE(ideal)``.
+* non-affine pair (``nf4`` vs the direct full-table NF4 dequant oracle):
+  the least-squares D&C split plus the per-code residual correction
+  recovers the codebook exactly up to float rounding, so the documented
+  bound is ``|MAE(nf4) - MAE(nf4_direct)| <= NF4_DC_VS_DIRECT_TOL``.
+* pruned residual (``nf4p``): dropping small residual entries trades
+  table bytes for a bounded MAE delta,
+  ``MAE(nf4p) <= MAE(nf4) + NF4P_MAE_DELTA_BOUND``; the harness reports
+  the residual-table bytes saved alongside.
 
 Run:  PYTHONPATH=src python examples/fig13_nn_accuracy.py
 """
@@ -16,13 +24,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.quant import quantize_weight, ste_luna_matmul
+from repro.core.lut import prune_residual, residual_table_bytes
+from repro.core.quant import (NF4P_PRUNE_THRESHOLD, quantize_weight,
+                              ste_luna_matmul)
 from repro.kernels.lut_gemm.ops import quantized_matmul
 
 MODES = ["ideal", "opt_dc", "approx_dc2", "approx_dc"]
 
 #: documented PTQ accuracy bound: frozen-4-bit MAE vs the bf16-trained MAE
 PTQ_MAE_BOUND = 1.25
+
+#: documented bound: residual-corrected D&C NF4 vs direct full-table NF4
+#: dequant — the correction is exact up to float rounding, so the two MAEs
+#: may differ only by accumulation noise.
+NF4_DC_VS_DIRECT_TOL = 1e-4
+
+#: documented bound on the MAE cost of pruning the NF4 residual sub-table
+#: at ``NF4P_PRUNE_THRESHOLD`` (absolute MAE delta vs unpruned nf4).
+NF4P_MAE_DELTA_BOUND = 0.05
 
 
 def make_data(n=512, d=8, seed=0):
@@ -63,15 +82,25 @@ def train_one(mode, steps=300, lr=3e-2):
     return mae, params
 
 
-def ptq_mae(params, kernel="lut_dc"):
+def ptq_mae(params, kernel="lut_dc", prune_threshold=None):
     """MAE of the bf16-trained net with weights frozen to 4-bit codes —
-    the serving engine's ``quant="lut4"`` / ``"int4"`` transform."""
+    the serving engine's ``quant="lut4"|"int4"|"nf4"|"nf4p"`` transform."""
     x, y = make_data()
-    q1 = quantize_weight(params["w1"], kernel)
-    q2 = quantize_weight(params["w2"], kernel)
+    q1 = quantize_weight(params["w1"], kernel, prune_threshold)
+    q2 = quantize_weight(params["w2"], kernel, prune_threshold)
     h = jnp.tanh(quantized_matmul(x, q1) + params["b1"])
     out = quantized_matmul(h, q2) + params["b2"]
     return float(jnp.abs(out - y).mean())
+
+
+def nf4p_table_report(threshold=NF4P_PRUNE_THRESHOLD):
+    """Residual sub-table cost: dense (16,) f32 vs pruned sparse storage."""
+    from repro.core.lut import NF4_CODEBOOK, dc_decompose_codebook
+    _, _, residual = dc_decompose_codebook(jnp.asarray(NF4_CODEBOOK))
+    kept_idx, _ = prune_residual(residual, threshold)
+    dense, pruned = residual_table_bytes(int(kept_idx.shape[0]))
+    return {"kept": int(kept_idx.shape[0]), "dense_bytes": dense,
+            "pruned_bytes": pruned, "bytes_saved": dense - pruned}
 
 
 def main():
@@ -83,13 +112,30 @@ def main():
         results[mode] = mae
         trained[mode] = params
         print(f"  {mode:>10}: MAE {mae:.4f}")
-    for kernel, label in (("lut_dc", "ptq_lut4"), ("dequant", "ptq_int4")):
-        results[label] = ptq_mae(trained["ideal"], kernel)
-        print(f"  {label:>10}: MAE {results[label]:.4f}")
+    ptq = (("lut_dc", None, "ptq_lut4"), ("dequant", None, "ptq_int4"),
+           ("nf4_dc", None, "ptq_nf4"),
+           ("nf4_dequant", None, "ptq_nf4_direct"),
+           ("nf4_dc", NF4P_PRUNE_THRESHOLD, "ptq_nf4p"))
+    for kernel, prune, label in ptq:
+        results[label] = ptq_mae(trained["ideal"], kernel, prune)
+        print(f"  {label:>14}: MAE {results[label]:.4f}")
+    tab = nf4p_table_report()
+    print(f"  nf4p residual table: kept {tab['kept']}/16 entries, "
+          f"{tab['pruned_bytes']}B vs {tab['dense_bytes']}B dense "
+          f"({tab['bytes_saved']}B saved)")
     assert results["ideal"] <= results["approx_dc"] * 1.2
     assert results["ptq_lut4"] <= results["ideal"] * PTQ_MAE_BOUND, \
         (results["ptq_lut4"], results["ideal"])
     assert results["ptq_lut4"] == results["ptq_int4"]   # same affine grid
+    # non-affine: residual-corrected D&C matches direct dequant up to
+    # float rounding; pruning costs a bounded MAE delta and saves bytes
+    assert abs(results["ptq_nf4"] - results["ptq_nf4_direct"]) \
+        <= NF4_DC_VS_DIRECT_TOL, \
+        (results["ptq_nf4"], results["ptq_nf4_direct"])
+    assert results["ptq_nf4p"] <= results["ptq_nf4"] + NF4P_MAE_DELTA_BOUND, \
+        (results["ptq_nf4p"], results["ptq_nf4"])
+    assert tab["bytes_saved"] > 0
+    results["nf4p_table"] = tab
     return results
 
 

@@ -94,3 +94,46 @@ def dc_decompose_codebook(codebook: jax.Array, digit_bits: int = 2
     lo_tab = jnp.mean(grid, axis=0) - mean        # column means, centered
     residual = (grid - hi_tab[:, None] - lo_tab[None, :]).reshape(-1)
     return hi_tab, lo_tab, residual
+
+
+def prune_residual(residual: jax.Array, threshold: float
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Sparsify a D&C residual table: keep entries with ``|r| >= threshold``.
+
+    The LUT-pruning tradeoff (PAPERS.md, Zhu et al.): residual entries
+    below the threshold contribute less to reconstruction than they cost
+    in table capacity, so they are dropped and only the kept set is
+    stored.  Returns ``(kept_idx, kept_val)`` — int32 code indices and
+    their residual values, the sparse representation a pruned sub-table
+    stores (each kept entry costs one value plus a 1-byte code index
+    instead of a dense slot for every code).
+    """
+    res = jnp.asarray(residual, jnp.float32)
+    keep = np.flatnonzero(np.abs(np.asarray(res)) >= threshold)
+    kept_idx = jnp.asarray(keep, jnp.int32)
+    return kept_idx, res[kept_idx]
+
+
+def scatter_residual(kept_idx: jax.Array, kept_val: jax.Array,
+                     size: int = 16) -> jax.Array:
+    """Densify a pruned residual for evaluation: dropped codes read 0.
+
+    The sparse gather semantics of a pruned sub-table — a code either hits
+    a kept entry or falls through to the pure ``HI + LO`` sum — expressed
+    as one scatter into a zero table so the select tree stays uniform.
+    """
+    return jnp.zeros((size,), jnp.float32).at[kept_idx].set(kept_val)
+
+
+def residual_table_bytes(n_kept: int, n_codes: int = 16,
+                         value_bytes: int = 4, index_bytes: int = 1
+                         ) -> tuple[int, int]:
+    """(dense, pruned) storage bytes of a residual sub-table.
+
+    Dense stores one value per code; the pruned form stores only the kept
+    ``(index, value)`` pairs.  Used by the benches to report the capacity
+    side of the LUT-pruning accuracy tradeoff.
+    """
+    dense = n_codes * value_bytes
+    pruned = n_kept * (value_bytes + index_bytes)
+    return dense, pruned

@@ -146,7 +146,16 @@ ste_luna_matmul.defvjp(_ste_fwd, _ste_bwd)
 #: "lut_dc" sums the paper's two 2-bit D&C sub-tables through the mux tree;
 #: "dequant" is the conventional-math baseline (direct affine dequant).
 #: Both reconstruct the identical affine grid — tokens match bit-for-bit.
-WEIGHT_KERNELS = ("lut_dc", "dequant")
+#: "nf4_dc" evaluates the NON-AFFINE NF4 codebook as HI + LO + a per-code
+#: residual correction (the least-squares D&C split of core.lut, possibly
+#: pruned); "nf4_dequant" is its conventional baseline (direct 16-entry
+#: codebook lookup — the oracle the residual path is pinned against).
+WEIGHT_KERNELS = ("lut_dc", "dequant", "nf4_dc", "nf4_dequant")
+
+#: default |residual| magnitude threshold for pruned sub-tables
+#: (quant="nf4p"): keeps exactly half the NF4 residual table's 16 entries
+#: — the capacity/accuracy operating point reported in the benches.
+NF4P_PRUNE_THRESHOLD = 0.05
 
 
 @jax.tree_util.register_pytree_node_class
@@ -157,24 +166,31 @@ class QuantizedWeight:
     ``codes``: (..., K, N) int8 codes in [0, 16); ``scale``/``zero_point``:
     (..., N) per-output-channel affine params from :func:`calibrate`;
     ``hi_tab``/``lo_tab``: (..., 4) D&C sub-tables in code space
-    (``q = hi_tab[q >> 2] + lo_tab[q & 3]`` exactly — the Fig 2/3 split of
-    the 16-entry LUT into two 4-entry tables).  ``kernel`` is static pytree
+    (``q = hi_tab[q >> 2] + lo_tab[q & 3]`` exactly for the affine kernels
+    — the Fig 2/3 split of the 16-entry LUT into two 4-entry tables).
+    ``residual``: ``None`` for affine kernels (the split is exact); for the
+    non-affine NF4 kernels a (..., 16) per-code correction table
+    (``cb[q] ~= hi_tab[q >> 2] + lo_tab[q & 3] + residual[q]``), dense or
+    pruned-to-zero below the magnitude threshold (see
+    :func:`repro.core.lut.prune_residual`).  ``kernel`` is static pytree
     aux data selecting the evaluation strategy (see ``WEIGHT_KERNELS``).
 
     Registered as a pytree so a stacked instance (leading layer axis on
     every array child) slices cleanly under ``jax.lax.scan`` and traces
-    through ``jax.jit`` like any other param leaf.
+    through ``jax.jit`` like any other param leaf (a ``None`` residual is
+    an empty subtree, so affine instances flatten exactly as before).
     """
     codes: jax.Array
     scale: jax.Array
     zero_point: jax.Array
     hi_tab: jax.Array
     lo_tab: jax.Array
+    residual: jax.Array | None = None
     kernel: str = "lut_dc"
 
     def tree_flatten(self):
         return ((self.codes, self.scale, self.zero_point,
-                 self.hi_tab, self.lo_tab), self.kernel)
+                 self.hi_tab, self.lo_tab, self.residual), self.kernel)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -185,21 +201,56 @@ class QuantizedWeight:
         return QParams(self.scale, self.zero_point, 4)
 
 
-def quantize_weight(w: jax.Array, kernel: str = "lut_dc") -> QuantizedWeight:
+def _nf4_dc_tables(prune_threshold: float | None):
+    """(hi, lo, residual) least-squares D&C split of the NF4 codebook,
+    residual optionally pruned to the kept-set sparse gather (dropped
+    codes read 0 and fall through to the pure HI + LO sum)."""
+    from repro.core.lut import (NF4_CODEBOOK, dc_decompose_codebook,
+                                prune_residual, scatter_residual)
+    hi_tab, lo_tab, residual = dc_decompose_codebook(jnp.asarray(NF4_CODEBOOK))
+    if prune_threshold is not None:
+        kept_idx, kept_val = prune_residual(residual, prune_threshold)
+        residual = scatter_residual(kept_idx, kept_val)
+    return hi_tab, lo_tab, residual
+
+
+def quantize_weight(w: jax.Array, kernel: str = "lut_dc",
+                    prune_threshold: float | None = None) -> QuantizedWeight:
     """Freeze a (…, K, N) float weight to a :class:`QuantizedWeight`.
 
-    Per-output-channel affine calibration over the K axis (the paper's
-    operands are unsigned codes; see the module docstring identity).  Leaves
-    with extra leading axes (scan-stacked layers) are quantized per-slice by
-    vmapping, so every array child carries the same leading axes and the
-    container remains ``jax.lax.scan``-sliceable.
+    Affine kernels (``"lut_dc"`` / ``"dequant"``) calibrate per output
+    channel over the K axis (the paper's operands are unsigned codes; see
+    the module docstring identity) and carry the exact code-space split
+    ``HI[i] = 4i``, ``LO[j] = j`` with no residual.  The NF4 kernels
+    (``"nf4_dc"`` / ``"nf4_dequant"``) encode against the non-affine NF4
+    codebook with per-output-channel absmax scaling (the codebook is
+    symmetric on [-1, 1], so ``zero_point`` is 0) and carry the
+    least-squares D&C split of the codebook plus its per-code residual —
+    pruned below ``prune_threshold`` when given (``quant="nf4p"``).
+
+    Leaves with extra leading axes (scan-stacked layers) are quantized
+    per-slice by vmapping, so every array child carries the same leading
+    axes and the container remains ``jax.lax.scan``-sliceable.
     """
     if kernel not in WEIGHT_KERNELS:
         raise ValueError(f"unknown weight kernel {kernel!r}; "
                          f"one of {WEIGHT_KERNELS}")
     if w.ndim > 2:
-        return jax.vmap(lambda wi: quantize_weight(wi, kernel))(w)
+        return jax.vmap(
+            lambda wi: quantize_weight(wi, kernel, prune_threshold))(w)
     wf = w.astype(jnp.float32)
+    if kernel in ("nf4_dc", "nf4_dequant"):
+        from repro.core.lut import NF4_CODEBOOK
+        cb = jnp.asarray(NF4_CODEBOOK)
+        scale = jnp.maximum(jnp.max(jnp.abs(wf), axis=0), 1e-8)
+        wn = wf / scale[None, :]
+        codes = jnp.argmin(jnp.abs(wn[..., None] - cb), axis=-1)
+        hi_tab, lo_tab, residual = _nf4_dc_tables(prune_threshold)
+        return QuantizedWeight(codes.astype(jnp.int8),
+                               scale.astype(jnp.float32),
+                               jnp.zeros_like(scale, jnp.float32),
+                               hi_tab, lo_tab, residual=residual,
+                               kernel=kernel)
     qp = calibrate(wf, bits=4, axis=-1)
     codes = quantize(wf, qp).astype(jnp.int8)
     # D&C sub-tables (code space): q = HI[q>>2] + LO[q&3], HI[i]=4i, LO[j]=j.
@@ -226,16 +277,33 @@ DECODE_QUANT_TARGETS = frozenset({
 _QUANT_PARENT_KEYS = frozenset({"attn", "mlp", "m", "shared"})
 
 
+#: EngineConfig(quant=...) mode -> (weight kernel, residual prune threshold).
+#: ``nf4_direct`` is not an engine mode: it is the conventional full-table
+#: NF4 dequant oracle the residual-corrected ``nf4`` path is pinned against
+#: in tests and the fig13 harness.
+DECODE_QUANT_KERNELS = {
+    "lut4": ("lut_dc", None),
+    "int4": ("dequant", None),
+    "nf4": ("nf4_dc", None),
+    "nf4p": ("nf4_dc", NF4P_PRUNE_THRESHOLD),
+    "nf4_direct": ("nf4_dequant", None),
+}
+
+
 def quantize_decode_params(params, quant: str):
     """Walk a model param tree, freezing every decode projection to 4-bit.
 
-    ``quant``: ``"lut4"`` (D&C sub-table LUT evaluation) or ``"int4"``
-    (direct-dequant baseline).  A leaf is quantized iff its dict key is in
-    ``DECODE_QUANT_TARGETS``, some ancestor key is in the quant-parent set,
-    and it is a float matrix — everything else (norms, embeddings, routers,
-    MoE routed experts, MLA w_uk/w_uv) passes through untouched.
+    ``quant``: ``"lut4"`` (affine D&C sub-table LUT evaluation), ``"int4"``
+    (direct-dequant baseline), ``"nf4"`` (non-affine NF4 codebook, D&C
+    sub-tables + per-code residual correction), ``"nf4p"`` (same with the
+    residual pruned below ``NF4P_PRUNE_THRESHOLD``), or ``"nf4_direct"``
+    (full-table NF4 dequant — the test oracle, not an engine mode).  A
+    leaf is quantized iff its dict key is in ``DECODE_QUANT_TARGETS``, some
+    ancestor key is in the quant-parent set, and it is a float matrix —
+    everything else (norms, embeddings, routers, MoE routed experts, MLA
+    w_uk/w_uv) passes through untouched.
     """
-    kernel = {"lut4": "lut_dc", "int4": "dequant"}[quant]
+    kernel, prune = DECODE_QUANT_KERNELS[quant]
 
     def walk(node, path):
         if isinstance(node, dict):
@@ -247,7 +315,7 @@ def quantize_decode_params(params, quant: str):
                 and any(p in _QUANT_PARENT_KEYS for p in path[:-1])
                 and hasattr(node, "ndim") and node.ndim >= 2
                 and jnp.issubdtype(node.dtype, jnp.floating)):
-            return quantize_weight(node, kernel)
+            return quantize_weight(node, kernel, prune)
         return node
 
     return walk(params, ())

@@ -15,6 +15,13 @@ kernels implement the paper's two select-tree organizations:
   saving.  Per-channel zero-points are subtracted pre-MXU (the ``z_w``
   correction term of the integer-GEMM identity in ``core.quant``), scales
   applied in the epilogue.
+* :func:`lut_gemm_dc_res` — residual-corrected D&C for NON-AFFINE
+  codebooks (NF4): the 6-select sum only spans separable tables, so the
+  least-squares residual of ``core.lut.dc_decompose_codebook`` is gathered
+  per code and added after the mux tree.  With the full residual the
+  reconstruction is exact up to float rounding; with a pruned residual
+  (``quant="nf4p"``) dropped codes fall through to the pure HI+LO sum and
+  the table trades capacity for a bounded accuracy cost.
 
 Memory layout per grid step: x tile (bm, bk) bf16/f32, packed codes tile
 (bk, bn) int8, dequantized tile (bk, bn) f32 (transient), accumulator
@@ -132,6 +139,75 @@ def _lut_gemm_dc_kernel(x_ref, codes_ref, hi_ref, lo_ref, zp_ref, scale_ref,
     @pl.when(k_step == nk - 1)
     def _flush():
         o_ref[...] = acc_ref[...] * scale_ref[...]          # (1, bn) bcast
+
+
+def _lut_gemm_dc_res_kernel(x_ref, codes_ref, hi_ref, lo_ref, res_ref,
+                            zp_ref, scale_ref, o_ref, acc_ref, *, nk: int):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    codes = codes_ref[...]
+    # 6-select D&C mux, then the per-code residual gather (a 16:1 select
+    # on the residual table — narrow storage in CIM, zeros where pruned)
+    w_q = (_dc_mux_dequant(codes, hi_ref, lo_ref)
+           + _mux_tree_dequant(codes, res_ref))          # (bk, bn) f32
+    w = w_q - zp_ref[...]                                # (1, bn) bcast
+    x = x_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(k_step == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...] * scale_ref[...]       # (1, bn) bcast
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def lut_gemm_dc_res(x: jax.Array, w_codes: jax.Array, hi_tab: jax.Array,
+                    lo_tab: jax.Array, residual: jax.Array,
+                    zero_point: jax.Array, scale: jax.Array, *,
+                    bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                    bk: int = DEFAULT_BK, interpret: bool = False
+                    ) -> jax.Array:
+    """``x @ ((HI[q>>2] + LO[q&3] + RES[q] - zp) * scale)`` — the
+    residual-corrected D&C dequant for NON-AFFINE codebooks (NF4).
+
+    x: (M, K) float; w_codes: (K, N) int8; hi_tab/lo_tab: (4,) f32
+    least-squares sub-tables; residual: (16,) f32 per-code correction
+    (zeros at pruned codes); zero_point/scale: (N,) f32 per-output-channel.
+    Returns (M, N) f32.  The epilogue order (residual add after the
+    6-select mux, zero-point pre-MXU, scale on the final K step) is the
+    contract :func:`repro.kernels.lut_gemm.ref.lut_gemm_dc_res_ref`
+    mirrors operation-for-operation, so kernel and reference agree
+    bitwise on single-K-block shapes.
+    """
+    m, k = x.shape
+    k2, n = w_codes.shape
+    assert k == k2 and hi_tab.shape == (4,) and lo_tab.shape == (4,)
+    assert residual.shape == (16,)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    nk = k // bk
+
+    return pl.pallas_call(
+        functools.partial(_lut_gemm_dc_res_kernel, nk=nk),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, 4), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((1, 4), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((1, 16), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w_codes, hi_tab.reshape(1, 4), lo_tab.reshape(1, 4),
+      residual.reshape(1, 16), zero_point.reshape(1, n), scale.reshape(1, n))
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))

@@ -11,6 +11,12 @@ Two reference semantics, matching the two Pallas kernels:
   the decomposition behind the paper's ~3.7x LUT-area saving.  With the
   affine sub-tables produced by ``core.quant.quantize_weight`` the two
   references reconstruct identical weights.
+* :func:`lut_gemm_dc_res_ref` — residual-corrected D&C (non-affine NF4):
+  the 6-select sum plus a per-code residual gather.  Unlike the affine
+  refs (which fold the scale into the weight before the matmul — the
+  order ``ops.quantized_matmul`` uses), this one mirrors the Pallas
+  kernel's epilogue order exactly (zero-point pre-matmul, scale after),
+  so kernel and reference are BITWISE-identical on single-K-block shapes.
 """
 from __future__ import annotations
 
@@ -37,3 +43,25 @@ def lut_gemm_dc_ref(x: jax.Array, w_codes: jax.Array, hi_tab: jax.Array,
     w_q = hi_tab[q >> 2] + lo_tab[q & 3]
     w = (w_q - zero_point[None, :]) * scale[None, :]
     return (x.astype(jnp.float32) @ w).astype(jnp.float32)
+
+
+def lut_gemm_dc_res_ref(x: jax.Array, w_codes: jax.Array, hi_tab: jax.Array,
+                        lo_tab: jax.Array, residual: jax.Array,
+                        zero_point: jax.Array, scale: jax.Array
+                        ) -> jax.Array:
+    """``x @ (HI[q>>2] + LO[q&3] + RES[q] - zp)`` scaled in the epilogue —
+    the residual-corrected D&C dequant (non-affine NF4).
+
+    ``w_codes``: (K, N) int8 codes in [0, 16); ``hi_tab``/``lo_tab``: (4,)
+    least-squares sub-tables; ``residual``: (16,) per-code correction
+    (zeros at pruned codes); ``zero_point``/``scale``: (N,) per-channel.
+    Operation order mirrors ``lut_gemm.lut_gemm_dc_res`` exactly (see its
+    docstring) — the bitwise-parity contract.  Returns (M, N) f32.
+    """
+    q = w_codes.astype(jnp.int32)
+    w_q = (hi_tab[q >> 2] + lo_tab[q & 3]) + residual[q]
+    w = w_q - zero_point[None, :]
+    acc = jax.lax.dot_general(x.astype(jnp.float32), w,
+                              (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    return acc * scale[None, :]

@@ -6,12 +6,16 @@
   # LUT-quantized decode hot path (engine-level, D&C sub-table gemm):
   PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --quant lut4
 
+  # non-affine NF4 decode (D&C + residual correction; nf4p = pruned):
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --quant nf4
+
 Engine knobs are single-sourced in ``repro.serve.config.EngineConfig`` —
 ``EngineConfig.add_cli_args`` registers the flags (including the shared
 ``--quant``), ``from_args`` builds the validated config.  ``--quant
-lut4|int4`` freezes 4-bit decode weights on the engine; any other spelling
-(bf16, int8, luna_*, ...) is a model-level mode applied to every
-projection dynamically.
+lut4|int4|nf4|nf4p`` freezes 4-bit decode weights on the engine (affine
+grid or NF4 codebook with full/pruned residual correction — see
+docs/quantization.md); any other spelling (bf16, int8, luna_*, ...) is a
+model-level mode applied to every projection dynamically.
 
 The CLI serves from the BACKGROUND LOOP by default (``engine.start()``,
 one ``submit()`` per request, streams consumed off the loop thread,

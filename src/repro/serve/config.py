@@ -27,8 +27,12 @@ from repro.serve.sampling import SamplingConfig
 
 #: engine-level decode quantization modes (EngineConfig.quant); model-level
 #: modes (bf16/int8/luna_* — dynamic per-call quantization via QuantConfig)
-#: stay on the model config and share the ``--quant`` CLI flag.
-ENGINE_QUANT_MODES = ("lut4", "int4")
+#: stay on the model config and share the ``--quant`` CLI flag.  The affine
+#: pair (lut4/int4) is token-identical by construction; the non-affine pair
+#: (nf4/nf4p) evaluates the NF4 codebook through the least-squares D&C
+#: split with a per-code residual correction — full for nf4, pruned below
+#: a magnitude threshold for nf4p (table capacity vs bounded accuracy).
+ENGINE_QUANT_MODES = ("lut4", "int4", "nf4", "nf4p")
 
 
 @dataclass(frozen=True)
@@ -58,9 +62,13 @@ class EngineConfig:
     * ``quant`` — decode weight quantization: ``"lut4"`` freezes decode
       projections to 4-bit codes evaluated through the paper's D&C
       sub-table LUT GEMM, ``"int4"`` is the direct-dequant baseline
-      (token-identical math, conventional evaluation), ``None`` keeps
-      bf16 decode token-identical to prior releases.  Prefill always runs
-      full precision; see ``docs/quantization.md``.
+      (token-identical math, conventional evaluation), ``"nf4"`` encodes
+      against the non-affine NF4 codebook and evaluates it as the
+      least-squares D&C split plus a per-code residual correction,
+      ``"nf4p"`` prunes that residual below a magnitude threshold (smaller
+      tables, bounded accuracy cost), ``None`` keeps bf16 decode
+      token-identical to prior releases.  Prefill always runs full
+      precision; see ``docs/quantization.md``.
     """
     max_batch: int = 8
     max_seq: int = 256
@@ -171,12 +179,15 @@ class EngineConfig:
         ap.add_argument("--seed", type=int, default=0)
         ap.add_argument("--quant", default=None,
                         help="weight quantization: 'lut4' (4-bit decode "
-                             "weights through the D&C sub-table LUT gemm) "
-                             "or 'int4' (direct-dequant baseline) quantize "
-                             "the DECODE hot path at engine construction; "
-                             "any other value (bf16, int8, int4_dequant, "
-                             "lut_nf4, luna_*) is a model-level mode "
-                             "applied dynamically to every projection")
+                             "weights through the D&C sub-table LUT gemm), "
+                             "'int4' (direct-dequant baseline), 'nf4' "
+                             "(non-affine NF4 codebook, D&C + residual "
+                             "correction) or 'nf4p' (pruned residual sub-"
+                             "table) quantize the DECODE hot path at "
+                             "engine construction; any other value (bf16, "
+                             "int8, int4_dequant, lut_nf4, luna_*) is a "
+                             "model-level mode applied dynamically to "
+                             "every projection")
 
     @classmethod
     def from_args(cls, args, **overrides) -> "EngineConfig":

@@ -466,7 +466,8 @@ class Engine:
         self.caches = self.backend.caches
         # decode weights are backend-owned state: the full-precision tree
         # itself under quant=None (token-identity), a frozen 4-bit tree
-        # under quant="lut4"/"int4" — prefill always uses self.params
+        # under quant="lut4"/"int4" (affine) or "nf4"/"nf4p" (NF4 codebook
+        # + D&C residual correction) — prefill always uses self.params
         self.decode_params = self.backend.prepare_decode_params(
             params, config.quant)
         self.prefix_cache = None

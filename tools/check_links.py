@@ -10,12 +10,21 @@ and reference definitions ``[label]: target``, and verifies that every
   (GitHub-style slugs: lowercase, spaces to dashes, punctuation dropped);
 * everything else must exist on disk relative to the referencing file.
 
-Exit 1 with one line per broken link; exit 0 silent-ish on success.
+With ``--orphans ROOT.md DIR`` it additionally fails on orphaned docs
+pages: every ``*.md`` under DIR must be transitively reachable from
+ROOT.md by following local markdown links — a doc nobody links to is a
+doc nobody reads, and CI stops it from rotting silently.
 
-Usage: python tools/check_links.py README.md ROADMAP.md docs/*.md
+Exit 1 with one line per broken link / orphan; exit 0 silent-ish on
+success.
+
+Usage:
+  python tools/check_links.py README.md ROADMAP.md docs/*.md
+  python tools/check_links.py --orphans README.md docs docs/*.md
 """
 from __future__ import annotations
 
+import argparse
 import re
 import sys
 from pathlib import Path
@@ -40,6 +49,23 @@ def anchors_of(path: Path) -> set[str]:
     return {slugify(h) for h in HEADING.findall(path.read_text())}
 
 
+def local_md_targets(md: Path) -> set[Path]:
+    """Resolved local ``*.md`` files ``md`` links to (anchors stripped,
+    code fences ignored) — the edge set for the orphan walk."""
+    text = FENCE.sub("", md.read_text())
+    out = set()
+    for t in INLINE.findall(text) + REFDEF.findall(text):
+        if t.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part = t.partition("#")[0]
+        if not path_part:
+            continue
+        dest = (md.parent / path_part).resolve()
+        if dest.suffix == ".md" and dest.exists():
+            out.add(dest)
+    return out
+
+
 def check_file(md: Path) -> list[str]:
     text = FENCE.sub("", md.read_text())   # links inside code fences are code
     targets = INLINE.findall(text) + REFDEF.findall(text)
@@ -60,23 +86,50 @@ def check_file(md: Path) -> list[str]:
     return errors
 
 
+def check_orphans(root: Path, docs_dir: Path) -> list[str]:
+    """Every ``*.md`` under ``docs_dir`` must be transitively reachable
+    from ``root`` by following local markdown links."""
+    if not root.exists():
+        return [f"{root}: orphan-check root not found"]
+    if not docs_dir.is_dir():
+        return [f"{docs_dir}: orphan-check directory not found"]
+    reachable = {root.resolve()}
+    frontier = [root.resolve()]
+    while frontier:
+        nxt = local_md_targets(frontier.pop())
+        fresh = nxt - reachable
+        reachable |= fresh
+        frontier.extend(fresh)
+    return [f"{page}: orphaned docs page (not reachable from {root} "
+            "via local links)"
+            for page in sorted(docs_dir.glob("**/*.md"))
+            if page.resolve() not in reachable]
+
+
 def main(argv: list[str]) -> int:
-    files = [Path(a) for a in argv]
-    if not files:
-        print("usage: python tools/check_links.py FILE.md [FILE.md ...]",
-              file=sys.stderr)
-        return 2
+    ap = argparse.ArgumentParser(
+        description="markdown link + orphan checker (stdlib-only)")
+    ap.add_argument("files", nargs="+", type=Path, metavar="FILE.md",
+                    help="markdown files whose links to verify")
+    ap.add_argument("--orphans", nargs=2, type=Path,
+                    metavar=("ROOT.md", "DIR"), default=None,
+                    help="also fail on *.md under DIR not transitively "
+                         "reachable from ROOT.md via local links")
+    args = ap.parse_args(argv)
     errors = []
-    for md in files:
+    for md in args.files:
         if not md.exists():
             errors.append(f"{md}: file not found")
             continue
         errors.extend(check_file(md))
+    if args.orphans is not None:
+        errors.extend(check_orphans(*args.orphans))
     for e in errors:
         print(e, file=sys.stderr)
     if errors:
         return 1
-    print(f"check_links: {len(files)} files OK")
+    extra = "" if args.orphans is None else " + orphan check"
+    print(f"check_links: {len(args.files)} files OK{extra}")
     return 0
 
 
