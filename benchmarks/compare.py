@@ -14,7 +14,11 @@ on presence: bf16/lut4/int4 decode rows must all report a positive tok/s
 (the frozen-4-bit decode path must never silently drop out of the bench).
 The ``sustained`` section (trace-driven load harness, virtual-time
 deterministic) is gated absolutely too: present, goodput positive, and
-high-priority p99 TTFT strictly below low-priority under overload.
+high-priority p99 TTFT strictly below low-priority under overload.  The
+``observability`` section is gated on recording overhead (tracing-on
+decode tok/s >= 97% of tracing-off) and on trace/token consistency
+(every emitted token is exactly one trace event, one submit + one finish
+per request).
 A markdown delta table is printed (append to ``$GITHUB_STEP_SUMMARY`` via
 ``--summary`` in CI).
 
@@ -177,6 +181,50 @@ def check_sustained_section(current: dict) -> list[str]:
     return fails
 
 
+def check_observability_section(current: dict) -> list[str]:
+    """Absolute gate on the ``observability`` section: the section must be
+    present, recording overhead must be bounded (tracing-on decode tok/s
+    at least 97% of tracing-off — median per-tick time over interleaved
+    off/on windows, so a miss is a real hot-path cost, not a scheduler
+    hiccup), and the traced consistency
+    run's event counts must reconcile with its token counts: every emitted
+    token is exactly one first_token or token event, and every request has
+    exactly one submit and one finish event."""
+    obs = current.get("observability")
+    if not obs:
+        return ["observability: section missing from the current run "
+                "(observability_overhead scenario dropped?)"]
+    fails = []
+    ratio = obs.get("overhead_ratio")
+    if ratio is None:
+        fails.append("observability: overhead_ratio missing")
+    elif ratio < 0.97:
+        fails.append(
+            f"observability: tracing-on decode is {ratio:.1%} of "
+            "tracing-off — recording overhead exceeds the 3% budget")
+    tr = obs.get("trace")
+    if not isinstance(tr, dict):
+        return fails + ["observability: trace consistency counts missing"]
+    emitted = tr.get("emitted_tokens")
+    tok_ev = tr.get("first_token_events", 0) + tr.get("token_events", 0)
+    if emitted is None or emitted <= 0:
+        fails.append(f"observability: emitted_tokens {emitted} not positive")
+    elif tok_ev != emitted:
+        fails.append(
+            f"observability: {tok_ev} first_token+token events != "
+            f"{emitted} emitted tokens")
+    n = tr.get("requests")
+    for ev in ("submit_events", "finish_events"):
+        if tr.get(ev) != n:
+            fails.append(f"observability: {ev} {tr.get(ev)} != "
+                         f"{n} requests")
+    if tr.get("dropped", 0) != 0:
+        fails.append(f"observability: consistency run dropped "
+                     f"{tr['dropped']} events (ring buffer too small "
+                     "for the scenario)")
+    return fails
+
+
 def markdown_table(rows, threshold: float) -> str:
     def fmt(v):
         return "—" if v is None else f"{v:,.1f}"
@@ -214,8 +262,9 @@ def main() -> None:
     latency_fails = check_latency_order(current)
     quant_fails = check_quant_section(current)
     sustained_fails = check_sustained_section(current)
+    obs_fails = check_observability_section(current)
     abs_fails = (prefix_fails + latency_fails + quant_fails
-                 + sustained_fails)
+                 + sustained_fails + obs_fails)
     table = markdown_table(rows, args.threshold)
     if abs_fails:
         table += "\n" + "\n".join(f"❌ {m}" for m in abs_fails) + "\n"
@@ -244,6 +293,12 @@ def main() -> None:
                 f"(miss {r['deadline_miss_rate']:.0%})"
                 for a, r in sus.items())
             table += f"✅ sustained goodput: {parts}\n"
+        obs = current.get("observability", {})
+        if obs:
+            table += (f"✅ observability: tracing overhead "
+                      f"{obs['overhead_ratio']:.1%} of baseline tok/s, "
+                      f"{obs['trace']['events_total']} trace events "
+                      "reconciled\n")
     print(table)
     if args.summary:
         with open(args.summary, "a") as f:

@@ -276,15 +276,30 @@ def main():
     ap.add_argument("--time-scale", type=float, default=0.02,
                     help="threaded mode: wall seconds per trace second")
     ap.add_argument("--out", default="LOAD_harness.json")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record the virtual run's request-lifecycle trace "
+                         "and write Perfetto JSON (byte-deterministic: the "
+                         "tracer stamps from the virtual clock)")
+    ap.add_argument("--metrics-dump", default=None, metavar="PATH",
+                    help="write the virtual engine's Prometheus text "
+                         "exposition after the run")
     args = ap.parse_args()
 
     report = {"arch": args.arch, "requests": args.requests,
               "rate_rps": args.rate, "seed": args.seed}
-    eng, cfg = build_engine(args.arch, clock=VirtualClock())
+    knobs = {"trace": True} if args.trace_out else {}
+    eng, cfg = build_engine(args.arch, clock=VirtualClock(), **knobs)
     trace = make_trace(args.requests, args.rate, cfg.vocab_size,
                        seed=args.seed, deadline_budgets={0: 0.8, 1: 0.5})
     report["virtual"] = run_virtual(eng, trace,
                                     tick_cost_s=args.tick_cost_s)
+    if args.trace_out:
+        from repro.obs import dump_trace
+        dump_trace(eng.tracer, args.trace_out)
+        report["trace_events"] = len(eng.tracer.events())
+    if args.metrics_dump:
+        from repro.obs import dump_metrics
+        dump_metrics(eng.registry, args.metrics_dump)
     if args.threaded:
         eng2, _ = build_engine(args.arch)
         report["threaded"] = run_threaded(eng2, trace,

@@ -21,6 +21,12 @@ The CLI serves from the BACKGROUND LOOP by default (``engine.start()``,
 one ``submit()`` per request, streams consumed off the loop thread,
 ``engine.stop()`` drains) — the same path a network front-end would use.
 ``--sync`` keeps the old caller-pumped ``engine.serve(requests)`` path.
+
+Observability (see docs/observability.md): ``--metrics-port`` serves the
+engine's metrics registry as a Prometheus scrape endpoint while the run
+lasts, ``--metrics-dump PATH`` writes the text exposition on exit, and
+``--trace-out PATH`` records request-lifecycle spans and writes Perfetto
+JSON on exit (open at https://ui.perfetto.dev).
 """
 from __future__ import annotations
 
@@ -60,6 +66,13 @@ def main():
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     engine = Engine(cfg, params, EngineConfig.from_args(args))
+    metrics_server = None
+    if args.metrics_port is not None:
+        from repro.obs import start_metrics_server
+        metrics_server = start_metrics_server(engine.registry,
+                                              args.metrics_port)
+        print(f"metrics: http://127.0.0.1:"
+              f"{metrics_server.server_address[1]}/metrics")
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(1, cfg.vocab_size, 6).tolist(),
@@ -70,7 +83,7 @@ def main():
     else:
         from concurrent.futures import ThreadPoolExecutor
 
-        start = replace(engine.metrics)
+        start = engine.metrics.snapshot()
         t0 = engine.clock()
         engine.start()
         handles = [engine.submit(r) for r in reqs]
@@ -95,6 +108,24 @@ def main():
         print(f"  prefix:  {stats['prefix_hits']} hits, "
               f"{stats['prefix_tokens_reused']} tok reused, "
               f"{stats['cache_evictions']} evictions")
+    # the rest of the summary: lifecycle + deadline accounting (zeros on
+    # an ordinary run, but dropping them silently hid every non-zero one)
+    print(f"  lifecycle: {stats['cancelled']} cancelled, "
+          f"{stats['preemptions']} preempted")
+    print(f"  deadlines: {stats['deadline_hits']} hit, "
+          f"{stats['deadline_misses']} missed")
+    if metrics_server is not None:
+        metrics_server.shutdown()
+    if args.metrics_dump:
+        from repro.obs import dump_metrics
+        dump_metrics(engine.registry, args.metrics_dump)
+        print(f"metrics dump: {args.metrics_dump}")
+    if args.trace_out:
+        from repro.obs import dump_trace
+        dump_trace(engine.tracer, args.trace_out)
+        print(f"trace: {args.trace_out} "
+              f"({len(engine.tracer.events())} events, "
+              f"{engine.tracer.dropped} dropped)")
 
 
 if __name__ == "__main__":

@@ -217,6 +217,13 @@ class CacheBackend:
         constant works."""
         return self.max_batch
 
+    @property
+    def total_capacity(self) -> int:
+        """Capacity ceiling in the same unit as :attr:`free_capacity`
+        (dense: slots; paged: reservable blocks) — lets the pool-occupancy
+        gauge report a meaningful fraction."""
+        return self.max_batch
+
     # --- block tables (all None for dense substrates) -------------------
     def admission_tables(self, slots: list[int]):
         return None
@@ -357,6 +364,10 @@ class PagedPool(CacheBackend):
     @property
     def free_capacity(self):
         return self.allocator.free_blocks
+
+    @property
+    def total_capacity(self):
+        return self.num_blocks - 1     # the garbage block is never free
 
     # --- block tables ---------------------------------------------------
     def admission_tables(self, slots):

@@ -69,6 +69,11 @@ class EngineConfig:
       tables, bounded accuracy cost), ``None`` keeps bf16 decode
       token-identical to prior releases.  Prefill always runs full
       precision; see ``docs/quantization.md``.
+    * ``trace`` / ``trace_buffer`` — request-lifecycle tracing
+      (``repro.obs``): record clock-stamped span events into a ring
+      buffer of ``trace_buffer`` events, exportable as Perfetto JSON.
+      Off by default (a disabled tracer is a cheap early-return); see
+      ``docs/observability.md``.
     """
     max_batch: int = 8
     max_seq: int = 256
@@ -84,6 +89,8 @@ class EngineConfig:
     starvation_bound: int = 8
     quant: str | None = None
     idle_backoff_s: float = 0.002
+    trace: bool = False
+    trace_buffer: int = 65536
 
     def __post_init__(self):
         if self.quant is not None and self.quant not in ENGINE_QUANT_MODES:
@@ -113,6 +120,9 @@ class EngineConfig:
         if self.idle_backoff_s < 0:
             raise ValueError(f"idle_backoff_s must be >= 0, "
                              f"got {self.idle_backoff_s}")
+        if self.trace_buffer < 1:
+            raise ValueError(f"trace_buffer must be >= 1, "
+                             f"got {self.trace_buffer}")
 
     # --- family cross-validation ----------------------------------------
     def validate(self, family: str) -> None:
@@ -172,6 +182,24 @@ class EngineConfig:
         ap.add_argument("--idle-backoff-s", type=float, default=None,
                         help="background serve loop: idle sleep between "
                              "re-checks when no work is pending")
+        ap.add_argument("--trace", action="store_true",
+                        help="record request-lifecycle + engine-phase trace "
+                             "events (ring-buffered; export with "
+                             "--trace-out)")
+        ap.add_argument("--trace-buffer", type=int, default=None,
+                        help="trace ring-buffer capacity in events "
+                             "(oldest dropped on overflow)")
+        ap.add_argument("--trace-out", default=None, metavar="PATH",
+                        help="write the trace as Perfetto/Chrome "
+                             "trace_event JSON on exit (implies --trace); "
+                             "open at https://ui.perfetto.dev")
+        ap.add_argument("--metrics-port", type=int, default=None,
+                        help="serve the metrics registry at "
+                             "http://127.0.0.1:PORT/metrics (Prometheus "
+                             "text exposition) from a background thread")
+        ap.add_argument("--metrics-dump", default=None, metavar="PATH",
+                        help="write the Prometheus text exposition to PATH "
+                             "on exit")
         ap.add_argument("--sampling", default="greedy",
                         choices=["greedy", "temperature", "top_k"])
         ap.add_argument("--temperature", type=float, default=1.0)
@@ -210,6 +238,8 @@ class EngineConfig:
         q = getattr(args, "quant", None)
         if q in ENGINE_QUANT_MODES:
             vals["quant"] = q
+        if getattr(args, "trace_out", None):
+            vals["trace"] = True       # a trace sink implies recording
         mode = getattr(args, "sampling", "greedy")
         vals["sampling"] = SamplingConfig(
             mode=mode, temperature=getattr(args, "temperature", 1.0),

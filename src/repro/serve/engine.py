@@ -83,13 +83,15 @@ import math
 import queue
 import threading
 import time
-from dataclasses import dataclass, field, fields, replace
+from dataclasses import dataclass, field, fields
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.registry import get_model
+from repro.obs import (ITL_BUCKETS, PHASE_BUCKETS, TTFT_BUCKETS,
+                       MetricsRegistry, Tracer)
 from repro.serve.backend import make_backend
 from repro.serve.config import EngineConfig
 from repro.serve.paged import ceil_div
@@ -125,6 +127,10 @@ class Request:
     cancelled: bool = False
     submit_ts: float | None = field(default=None, repr=False)
     token_ts: list[float] = field(default_factory=list, repr=False)
+    # engine-internal: the submit trace event / submitted counter fired
+    # (submit_ts alone can't carry this — harnesses pre-pin arrival
+    # stamps, and a backpressured submit() retry must not double-count)
+    _submit_seen: bool = field(default=False, repr=False)
 
 
 #: end-of-stream sentinel pushed onto every subscribed token queue at
@@ -386,7 +392,14 @@ class _ChunkedPrefill:
 
 @dataclass
 class EngineMetrics:
-    """Wall-clock + token accounting split by phase."""
+    """Wall-clock + token accounting split by phase: the VALUE type.
+
+    A plain snapshot — ``Engine.metrics`` is an :class:`EngineMetricsView`
+    over the engine's :class:`~repro.obs.registry.MetricsRegistry` that
+    reads and writes these same fields live; ``view.snapshot()`` (and
+    ``since()``) return instances of this dataclass.  The field set,
+    ``since()``, and ``summary()`` contracts are pinned in
+    ``tests/test_obs.py``."""
     prefill_s: float = 0.0
     decode_s: float = 0.0
     prefill_tokens: int = 0      # prompt tokens pushed through prefill
@@ -419,8 +432,14 @@ class EngineMetrics:
             "prefill_calls": self.prefill_calls,
             "prefill_chunks": self.prefill_chunks,
             "ticks": self.ticks,
-            "prefill_tok_s": self.prefill_tokens / max(self.prefill_s, 1e-9),
-            "decode_tok_s": self.decode_tokens / max(self.decode_s, 1e-9),
+            # tok/s is 0.0 when NO tokens moved: an empty run divides 0
+            # tokens by near-zero wall time, and 0/eps reporting absurd
+            # throughputs is worse than an honest zero
+            "prefill_tok_s": (self.prefill_tokens
+                              / max(self.prefill_s, 1e-9)
+                              if self.prefill_tokens else 0.0),
+            "decode_tok_s": (self.decode_tokens / max(self.decode_s, 1e-9)
+                             if self.decode_tokens else 0.0),
             "occupancy": (self.occupancy_sum / (self.ticks * max_batch)
                           if self.ticks else 0.0),
             "prefix_hits": self.prefix_hits,
@@ -432,6 +451,85 @@ class EngineMetrics:
             "deadline_misses": self.deadline_misses,
         }
         return d
+
+
+#: EngineMetrics field -> (registry metric name, help).  The registry is
+#: the single source of truth; the view below is the dataclass-shaped
+#: facade engine code and tests read/write.
+_ENGINE_COUNTERS = {
+    "prefill_s": ("engine_prefill_seconds_total",
+                  "wall seconds inside prefill jit calls"),
+    "decode_s": ("engine_decode_seconds_total",
+                 "wall seconds inside decode jit calls"),
+    "prefill_tokens": ("engine_prefill_tokens_total",
+                       "prompt tokens pushed through prefill"),
+    "decode_tokens": ("engine_decode_tokens_total",
+                      "tokens emitted by decode ticks"),
+    "prefill_calls": ("engine_prefill_calls_total",
+                      "jit prefill invocations (bucket or chunk)"),
+    "prefill_chunks": ("engine_prefill_chunks_total",
+                       "chunked-admission prefill pieces"),
+    "ticks": ("engine_ticks_total", "engine ticks run"),
+    "occupancy_sum": ("engine_occupancy_slots_total",
+                      "sum over ticks of active slots"),
+    "prefix_hits": ("engine_prefix_hits_total",
+                    "admissions seeded from the prefix cache"),
+    "prefix_tokens_reused": ("engine_prefix_tokens_reused_total",
+                             "prompt tokens not re-prefilled"),
+    "cache_evictions": ("engine_prefix_cache_evictions_total",
+                        "prefix-cache nodes evicted (LRU)"),
+    "cancelled": ("engine_requests_cancelled_total",
+                  "requests cancelled mid-lifecycle"),
+    "preemptions": ("engine_preemptions_total",
+                    "active requests kicked back to the queue"),
+    "deadline_hits": ("engine_deadline_hits_total",
+                      "first token on or before the request deadline"),
+    "deadline_misses": ("engine_deadline_misses_total",
+                        "first token after the request deadline"),
+}
+
+
+class EngineMetricsView:
+    """Live :class:`EngineMetrics` facade over a metrics registry.
+
+    Attribute reads return the registry counter's current value and
+    attribute writes set it (``engine.metrics.ticks += 1`` and the
+    bench's counter resets both work unchanged), so the registry is the
+    single source of truth while every historical ``engine.metrics``
+    call site keeps its contract.  ``snapshot()`` materializes a plain
+    :class:`EngineMetrics`; ``since()``/``summary()`` delegate to it.
+    """
+
+    __slots__ = ("_counters",)
+
+    def __init__(self, registry):
+        object.__setattr__(self, "_counters", {
+            f: registry.counter(name, help)
+            for f, (name, help) in _ENGINE_COUNTERS.items()})
+
+    def __getattr__(self, name):
+        try:
+            c = object.__getattribute__(self, "_counters")[name]
+        except KeyError:
+            raise AttributeError(name) from None
+        return c.value()
+
+    def __setattr__(self, name, value):
+        counters = object.__getattribute__(self, "_counters")
+        if name not in counters:
+            raise AttributeError(
+                f"EngineMetricsView has no metric field {name!r}")
+        counters[name].set(value)
+
+    def snapshot(self) -> EngineMetrics:
+        return EngineMetrics(**{f.name: getattr(self, f.name)
+                                for f in fields(EngineMetrics)})
+
+    def since(self, start: EngineMetrics) -> EngineMetrics:
+        return self.snapshot().since(start)
+
+    def summary(self, max_batch: int) -> dict:
+        return self.snapshot().summary(max_batch)
 
 
 class Engine:
@@ -499,12 +597,85 @@ class Engine:
         self._drain_on_stop = True
         self.scheduler = Scheduler(config.starvation_bound,
                                    clock=self.clock)
-        self.metrics = EngineMetrics()
+        # observability: ONE registry per engine is the source of truth
+        # for every counter (self.metrics is a live view over it); the
+        # tracer shares self.clock so virtual-clock runs trace
+        # deterministically.  Both exist even when tracing is off —
+        # disabled tracer events are a cheap early-return.
+        self.registry = MetricsRegistry()
+        self.metrics = EngineMetricsView(self.registry)
+        self.tracer = Tracer(clock=self.clock,
+                             capacity=config.trace_buffer,
+                             enabled=config.trace)
+        self._obs_init(cfg.family, config)
         self._prefill = jax.jit(self._prefill_impl)
         self._decode = jax.jit(self._decode_impl)
         self._chunk_step = jax.jit(self._chunk_step_impl)
         self._chunk_finish = jax.jit(self._chunk_finish_impl)
         self._seed_gather = jax.jit(self.backend.gather_staging)
+
+    # --- observability ---------------------------------------------------
+    def _obs_init(self, family: str, config: EngineConfig):
+        """Register the engine's non-EngineMetrics instruments: latency
+        histograms, lifecycle counters, level gauges, and the static
+        ``engine_info`` identity series."""
+        reg = self.registry
+        self._h_ttft = reg.histogram(
+            "engine_ttft_seconds",
+            "time from submit to first emitted token",
+            ("priority",), buckets=TTFT_BUCKETS)
+        self._h_itl = reg.histogram(
+            "engine_itl_seconds",
+            "latency between consecutive emitted tokens",
+            ("priority",), buckets=ITL_BUCKETS)
+        self._h_phase = reg.histogram(
+            "engine_tick_phase_seconds",
+            "wall seconds per engine phase per tick",
+            ("phase",), buckets=PHASE_BUCKETS)
+        self._c_submitted = reg.counter(
+            "engine_requests_submitted_total",
+            "requests submitted (first submission only)", ("priority",))
+        self._c_finished = reg.counter(
+            "engine_requests_finished_total",
+            "requests retired (completed or cancelled)")
+        self._c_prefix_lookups = reg.counter(
+            "engine_prefix_lookups_total",
+            "prefix-cache lookups by result", ("result",))
+        self._g_queue = reg.gauge(
+            "engine_queue_depth", "requests queued on the scheduler")
+        self._g_active = reg.gauge(
+            "engine_active_slots", "slots actively decoding")
+        self._g_staged = reg.gauge(
+            "engine_staged_admissions",
+            "staged (chunked / warm-prefix) admissions in flight")
+        self._g_free = reg.gauge(
+            "engine_pool_free_capacity",
+            "backend free capacity (dense: slots; paged: blocks)")
+        reg.gauge(
+            "engine_info",
+            "static engine identity (value is always 1)",
+            ("family", "quant", "paged"),
+        ).set(1, family=family, quant=config.quant or "bf16",
+              paged=str(bool(config.paged)).lower())
+        self._update_gauges()
+
+    def _update_gauges(self):
+        """Refresh the level gauges; called at every queue/slot/pool
+        transition (all under the engine lock)."""
+        self._g_queue.set(self.scheduler.pending)
+        self._g_active.set(len(self.active))
+        self._g_staged.set(len(self._chunked))
+        self._g_free.set(self.backend.free_capacity)
+
+    def _note_submit(self, req: Request):
+        """Once-only submit accounting: the counter bumps and the trace
+        event fires the FIRST time the engine sees the request, stamped
+        at its (possibly harness-pinned) ``submit_ts``."""
+        if not req._submit_seen:
+            req._submit_seen = True
+            self._c_submitted.add(priority=str(req.priority))
+            self.tracer.event("submit", rid=req.rid, ts=req.submit_ts,
+                              priority=req.priority)
 
     # --- substrate views (compat surface; the logic lives in backend) ---
     @property
@@ -621,17 +792,33 @@ class Engine:
         req.out.append(tok)
         ts = self.clock()
         req.token_ts.append(ts)
-        if len(req.out) == 1 and req.deadline is not None:
-            if ts > req.deadline:
-                self.metrics.deadline_misses += 1
-            else:
-                self.metrics.deadline_hits += 1
+        if len(req.out) == 1:
+            if req.submit_ts is not None:
+                self._h_ttft.observe(ts - req.submit_ts,
+                                     priority=str(req.priority))
+            self.tracer.event("first_token", rid=req.rid, ts=ts)
+            if req.deadline is not None:
+                if ts > req.deadline:
+                    self.metrics.deadline_misses += 1
+                else:
+                    self.metrics.deadline_hits += 1
+        else:
+            self._h_itl.observe(ts - req.token_ts[-2],
+                                priority=str(req.priority))
+            self.tracer.event("token", rid=req.rid, ts=ts)
         for q in self._streams.get(req, ()):
             q.put(tok)
         for cb in tuple(self._callbacks.get(req, ())):
             cb(tok)
 
     def _retire(self, req: Request):
+        if not req.done:
+            # _retire can run twice for a request cancelled mid-admission
+            # (cancel() retires it, then the admission path retires again
+            # on seeing req.done) — the guard keeps finish single-shot
+            self.tracer.event("finish", rid=req.rid, tokens=len(req.out),
+                              cancelled=req.cancelled)
+            self._c_finished.add()
         req.done = True
         self._callbacks.pop(req, None)
         for q in self._streams.pop(req, ()):
@@ -659,9 +846,12 @@ class Engine:
         the last-position logits, hence the ``len - 1`` cap."""
         if self.prefix_cache is None:
             return None
-        return self.prefix_cache.match(req.prompt,
-                                       max_len=len(req.prompt) - 1,
-                                       need_state=self.backend.needs_state)
+        hit = self.prefix_cache.match(req.prompt,
+                                      max_len=len(req.prompt) - 1,
+                                      need_state=self.backend.needs_state)
+        self._c_prefix_lookups.add(
+            result="hit" if hit is not None else "miss")
+        return hit
 
     def _capture_boundary(self, prompt_len: int) -> int:
         """Grid boundary to snapshot recurrent state at (0 = none)."""
@@ -750,6 +940,7 @@ class Engine:
             self._validate(req)
             if req.submit_ts is None:
                 req.submit_ts = self.clock()
+            self._note_submit(req)
             handle = RequestHandle(self, req, on_token=on_token)
             if self.running:
                 # loop mode: register the callback for the whole queued
@@ -764,8 +955,10 @@ class Engine:
                 if not handle._admitted and not req.done \
                         and not self.scheduler.queued(req):
                     self.scheduler.push(req)
+                    self.tracer.event("queue", rid=req.rid)
             else:
                 handle._admitted = self._admit_handle(handle)
+            self._update_gauges()
         self._loop_wake.set()
         return handle
 
@@ -912,14 +1105,19 @@ class Engine:
             req.prompt = list(req.prompt) + list(req.out)
             self.scheduler.push(req)
             self.metrics.preemptions += 1
+            self.tracer.event("preempt", rid=req.rid)
+            self.tracer.event("queue", rid=req.rid)
+            self._update_gauges()
         self._loop_wake.set()
         return True
 
     def _finish_cancel(self, req: Request):
         req.cancelled = True
         self.scheduler.clear_stall(req.rid)
+        self.tracer.event("cancel", rid=req.rid)
         self._retire(req)
         self.metrics.cancelled += 1
+        self._update_gauges()
 
     def _bucket_len(self, n: int) -> int:
         return min(ceil_div(n, self.prefill_bucket) * self.prefill_bucket,
@@ -931,6 +1129,8 @@ class Engine:
         Callers must have ``_validate``d (and ``_reserve``d) each request
         first."""
         assert len(reqs) == len(slots)
+        for r, s in zip(reqs, slots):
+            self.tracer.event("admit", rid=r.rid, slot=s, staged=False)
         prev_admitting = self._admitting
         self._admitting = True
         try:
@@ -958,8 +1158,11 @@ class Engine:
                 self.params, jnp.asarray(toks), self.caches,
                 jnp.asarray(last), slot_ids, tables, rids, self.key)
             nxt = np.asarray(nxt)          # sync for honest wall-clock
-            self.metrics.prefill_s += self.clock() - t0
+            dt = self.clock() - t0
+            self.metrics.prefill_s += dt
             self.metrics.prefill_calls += 1
+            self._h_phase.observe(dt, phase="prefill")
+            self.tracer.event("prefill", ts=t0, dur=dt, batch=k)
             for j, i in enumerate(idxs):
                 req, slot = reqs[i], slots[i]
                 self._emit(req, int(nxt[j]))
@@ -998,6 +1201,8 @@ class Engine:
             self.metrics.prefix_tokens_reused += consumed
         else:
             staging = self.backend.fresh(1)
+        self.tracer.event("admit", rid=req.rid, slot=slot, staged=True,
+                          reused=consumed)
         cap = None
         if self.prefix_cache is not None and self.backend.needs_state:
             c = self._capture_boundary(len(req.prompt))
@@ -1035,11 +1240,16 @@ class Engine:
                                           cp.staging, jnp.int32(cp.consumed))
             jax.block_until_ready(cp.staging)
             cp.consumed += c
-            self.metrics.prefill_s += self.clock() - t0
+            dt = self.clock() - t0
+            self.metrics.prefill_s += dt
             self.metrics.prefill_tokens += c
             self.metrics.prefill_calls += 1
+            self._h_phase.observe(dt, phase="prefill")
+            self.tracer.event("prefill", ts=t0, dur=dt, batch=1)
             if self.prefill_chunk is not None:
                 self.metrics.prefill_chunks += 1
+                self.tracer.event("prefill_chunk", rid=req.rid, ts=t0,
+                                  consumed=cp.consumed)
             if cp.capture_at == cp.consumed:
                 cp.captured = self.backend.snapshot(cp.staging, 0)
             return
@@ -1058,11 +1268,16 @@ class Engine:
             self.caches, slot_ids, tables, jnp.asarray([req.rid], jnp.int32),
             self.key)
         nxt = np.asarray(nxt)
-        self.metrics.prefill_s += self.clock() - t0
+        dt = self.clock() - t0
+        self.metrics.prefill_s += dt
         self.metrics.prefill_tokens += remaining
         self.metrics.prefill_calls += 1
+        self._h_phase.observe(dt, phase="prefill")
+        self.tracer.event("prefill", ts=t0, dur=dt, batch=1)
         if self.prefill_chunk is not None:
             self.metrics.prefill_chunks += 1
+            self.tracer.event("prefill_chunk", rid=req.rid, ts=t0,
+                              consumed=len(req.prompt))
         self._finish_prefix_insert(cp, staged_out)
         self._emit(req, int(nxt[0]))
         if req.done or len(req.out) >= req.max_new:
@@ -1146,9 +1361,14 @@ class Engine:
         both drive exactly this body, which is what pins loop-mode output
         token-identical to sync output.  Callers MUST hold the engine
         lock."""
+        ta = self.clock()
         self._admit_pending()
         self._advance_chunked()
+        dta = self.clock() - ta
+        self._h_phase.observe(dta, phase="admit")
+        self.tracer.event("admit", ts=ta, dur=dta)
         if not self.active:
+            self._update_gauges()
             return
         toks = np.zeros((self.max_batch, 1), np.int32)
         rids = np.full(self.max_batch, -1, np.int32)
@@ -1168,10 +1388,14 @@ class Engine:
             jnp.asarray(self.positions), tables, jnp.asarray(rids),
             jnp.asarray(steps), self.key)
         nxt = np.asarray(nxt)
-        self.metrics.decode_s += self.clock() - t0
+        dt = self.clock() - t0
+        self.metrics.decode_s += dt
         self.metrics.ticks += 1
         self.metrics.occupancy_sum += n_active
         self.metrics.decode_tokens += n_active
+        self._h_phase.observe(dt, phase="decode")
+        self.tracer.event("decode", ts=t0, dur=dt, batch=n_active)
+        t2 = self.clock()
         for s, req in enumerate(self.slots):
             if req is None or req.rid not in self.active:
                 continue
@@ -1186,6 +1410,10 @@ class Engine:
                 self._retire(req)
                 self.active.pop(req.rid, None)
                 self._free_slot(s)
+        dte = self.clock() - t2
+        self._h_phase.observe(dte, phase="emit")
+        self.tracer.event("emit", ts=t2, dur=dte)
+        self._update_gauges()
 
     def serve(self, requests: list[Request], max_ticks: int = 512) -> dict:
         """Queue ``requests`` on the scheduler and run to completion (or
@@ -1205,8 +1433,11 @@ class Engine:
             for r in requests:
                 if r.submit_ts is None:
                     r.submit_ts = now
+                self._note_submit(r)
                 self.scheduler.push(r)
-            start = replace(self.metrics)
+                self.tracer.event("queue", rid=r.rid)
+            self._update_gauges()
+            start = self.metrics.snapshot()
         t0 = self.clock()
         ticks = 0
         while (self.scheduler.pending or self.active or self._chunked) \

@@ -89,6 +89,8 @@ class PrefixCache:
         self._tick = 0
         self.node_count = 0
         self.evictions = 0            # lifetime total (engine metrics diff)
+        self.lookups = 0              # lifetime match() calls
+        self.hits = 0                 # lifetime match() calls that hit
         # cache-side owner count per block id: how many node payloads hold
         # it.  backend.refcount(b) == _block_owners[b] <=> no live request
         # shares b, which is what pool-shortage eviction needs to know.
@@ -106,6 +108,7 @@ class PrefixCache:
         families can take any whole-block prefix of a deeper node's blocks.
         """
         self._tick += 1
+        self.lookups += 1
         node, depth, best = self._root, 0, None
         while True:
             hit = self._usable(node, max_len, need_state)
@@ -135,6 +138,7 @@ class PrefixCache:
         if best is None:
             return None
         node, hit = best
+        self.hits += 1
         n = node
         while n is not None:          # refresh the whole hit path's LRU age
             n.last_used = self._tick
