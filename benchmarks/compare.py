@@ -15,6 +15,9 @@ on presence: bf16/lut4/int4 decode rows must all report a positive tok/s
 The ``sustained`` section (trace-driven load harness, virtual-time
 deterministic) is gated absolutely too: present, goodput positive, and
 high-priority p99 TTFT strictly below low-priority under overload.  The
+``spec`` section (speculative decoding) is gated on presence, acceptance
+in (0, 1], reconciled draft accounting, and a loose 0.2x collapse floor
+on effective tok/s vs the non-speculative baseline.  The
 ``observability`` section is gated on recording overhead (tracing-on
 decode tok/s >= 97% of tracing-off) and on trace/token consistency
 (every emitted token is exactly one trace event, one submit + one finish
@@ -181,6 +184,54 @@ def check_sustained_section(current: dict) -> list[str]:
     return fails
 
 
+def check_spec_section(current: dict) -> list[str]:
+    """Absolute gate on the ``spec`` section (speculative decoding):
+    the baseline row and both proposer rows (ngram / self_lut) must be
+    present, acceptance must be a real rate in (0, 1], draft accounting
+    must reconcile (0 <= accepted <= drafted, drafted > 0), and
+    effective decode tok/s must clear a LOOSE floor vs the
+    non-speculative baseline (>= 0.2x).  The floor is a collapse guard,
+    not a speedup claim: on CPU the self-speculative drafter pays
+    ``spec_k`` extra sequential decode steps per tick, so only
+    high-acceptance workloads net out ahead — what must never happen
+    silently is the spec path grinding to a halt, or acceptance going to
+    zero (drafts never matching the verifier means the proposer or the
+    accept scan broke, since the bench prompts are periodic by
+    construction)."""
+    spec = current.get("spec")
+    if not spec:
+        return ["spec: section missing from the current run "
+                "(speculative_decode scenario dropped?)"]
+    fails = []
+    base = (spec.get("baseline") or {}).get("decode_tok_s")
+    if base is None or base <= 0:
+        fails.append(f"spec.baseline: decode_tok_s {base} not positive")
+    for mode in ("ngram", "self_lut"):
+        row = spec.get(mode)
+        if not isinstance(row, dict):
+            fails.append(f"spec.{mode}: row missing")
+            continue
+        tok_s = row.get("decode_tok_s")
+        if tok_s is None or tok_s <= 0:
+            fails.append(f"spec.{mode}: decode_tok_s {tok_s} not positive")
+        acc = row.get("acceptance")
+        if acc is None or not 0.0 < acc <= 1.0:
+            fails.append(f"spec.{mode}: acceptance {acc} outside (0, 1]")
+        drafted, accepted = row.get("drafted"), row.get("accepted")
+        if not drafted or accepted is None \
+                or not 0 <= accepted <= drafted:
+            fails.append(f"spec.{mode}: draft accounting drafted={drafted} "
+                         f"accepted={accepted} inconsistent")
+        ratio = row.get("tok_s_vs_baseline")
+        if ratio is None:
+            fails.append(f"spec.{mode}: tok_s_vs_baseline missing")
+        elif ratio < 0.2:
+            fails.append(
+                f"spec.{mode}: effective decode {ratio:.2f}x baseline — "
+                "below the 0.2x collapse floor")
+    return fails
+
+
 def check_observability_section(current: dict) -> list[str]:
     """Absolute gate on the ``observability`` section: the section must be
     present, recording overhead must be bounded (tracing-on decode tok/s
@@ -262,9 +313,10 @@ def main() -> None:
     latency_fails = check_latency_order(current)
     quant_fails = check_quant_section(current)
     sustained_fails = check_sustained_section(current)
+    spec_fails = check_spec_section(current)
     obs_fails = check_observability_section(current)
     abs_fails = (prefix_fails + latency_fails + quant_fails
-                 + sustained_fails + obs_fails)
+                 + sustained_fails + spec_fails + obs_fails)
     table = markdown_table(rows, args.threshold)
     if abs_fails:
         table += "\n" + "\n".join(f"❌ {m}" for m in abs_fails) + "\n"
@@ -293,6 +345,13 @@ def main() -> None:
                 f"(miss {r['deadline_miss_rate']:.0%})"
                 for a, r in sus.items())
             table += f"✅ sustained goodput: {parts}\n"
+        sp = current.get("spec", {})
+        if sp:
+            parts = ", ".join(
+                f"{m} {r['tok_s_vs_baseline']:.2f}x "
+                f"(acc {r['acceptance']:.0%})"
+                for m, r in sp.items() if "acceptance" in r)
+            table += f"✅ speculative decode vs baseline: {parts}\n"
         obs = current.get("observability", {})
         if obs:
             table += (f"✅ observability: tracing overhead "

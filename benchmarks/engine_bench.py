@@ -51,16 +51,24 @@ def _build(quant: str, max_batch: int, max_seq: int, arch: str = "yi-9b",
     return cfg, Engine(cfg, params, econf, clock=clock)
 
 
-def _steady_decode_tok_s(eng, cfg, mb: int, ticks: int, max_seq: int
-                         ) -> float:
-    """Fill every slot, burn warm-up (compile) ticks, time ``ticks``."""
+def _steady_decode_tok_s(eng, cfg, mb: int, ticks: int, max_seq: int,
+                         periodic: bool = False) -> float:
+    """Fill every slot, burn warm-up (compile) ticks, time ``ticks``.
+    ``periodic``: repeat a short token pattern instead of a uniform random
+    prompt — gives the n-gram draft proposer material (the spec section
+    runs its baseline with the same prompts for a fair ratio)."""
     import numpy as np
 
     from repro.serve.engine import Request
 
     rng = np.random.default_rng(0)
-    reqs = [Request(rid=i,
-                    prompt=rng.integers(1, cfg.vocab_size, 6).tolist(),
+
+    def prompt():
+        if periodic:
+            return rng.integers(1, cfg.vocab_size, 3).tolist() * 3
+        return rng.integers(1, cfg.vocab_size, 6).tolist()
+
+    reqs = [Request(rid=i, prompt=prompt(),
                     max_new=max_seq)           # never finishes mid-bench
             for i in range(mb)]
     for i, r in enumerate(reqs):
@@ -146,6 +154,45 @@ def quant_decode_modes(batch: int = 4, ticks: int = 12, max_seq: int = 64,
         print(f"engine_quant_nf4p_residual_table,0,"
               f"bytes_saved={rows['nf4p']['table_bytes_saved']};"
               f"mae_delta={rows['nf4p']['mae_delta']:.4f}")
+    return rows
+
+
+def speculative_decode(batch: int = 4, ticks: int = 12, max_seq: int = 64,
+                       spec_k: int = 4) -> dict:
+    """Steady-state decode tok/s with speculative decoding vs the plain
+    tick, same scenario (the ``spec`` section of ``BENCH_engine.json``).
+
+    One row per proposer (``ngram`` prompt-lookup, ``self_lut``
+    self-speculation over the pruned-LUT nf4p tree) plus the non-spec
+    ``baseline``; each row reports emitted tok/s, the draft acceptance
+    rate from the engine's own counters, and the ratio vs baseline.
+    Prompts are periodic so prompt-lookup has material.  On a real
+    accelerator the verify window amortizes weight reads over ``spec_k+1``
+    positions and accepted drafts are nearly free; CPU-interpreted ratios
+    only show the relative shape (``compare.check_spec_section`` gates
+    presence, acceptance sanity, and a loose tok/s floor, not a CPU
+    speedup)."""
+    rows = {}
+    cfg, eng = _build("bf16", batch, max_seq)
+    base = _steady_decode_tok_s(eng, cfg, batch, ticks, max_seq,
+                                periodic=True)
+    rows["baseline"] = {"decode_tok_s": base}
+    print(f"engine_spec_baseline_b{batch},"
+          f"{batch / max(base, 1e-9) * 1e6:.0f},tok_s={base:.1f}")
+    for mode in ("ngram", "self_lut"):
+        cfg, eng = _build("bf16", batch, max_seq, spec=mode, spec_k=spec_k)
+        tok_s = _steady_decode_tok_s(eng, cfg, batch, ticks, max_seq,
+                                     periodic=True)
+        m = eng.metrics
+        drafted, accepted = int(m.spec_drafted), int(m.spec_accepted)
+        acc = accepted / drafted if drafted else 0.0
+        ratio = tok_s / max(base, 1e-9)
+        rows[mode] = {"decode_tok_s": tok_s, "acceptance": acc,
+                      "drafted": drafted, "accepted": accepted,
+                      "tok_s_vs_baseline": ratio}
+        print(f"engine_spec_{mode}_b{batch},"
+              f"{batch / max(tok_s, 1e-9) * 1e6:.0f},tok_s={tok_s:.1f};"
+              f"acceptance={acc:.2f};vs_baseline={ratio:.2f}")
     return rows
 
 
@@ -547,8 +594,11 @@ def bench_json(path: str = "BENCH_engine.json", batches=DEF_BATCHES,
     TTFT/ITL p50/p95 from the mixed-load scenario, gated on high-priority
     p95 TTFT beating low — and a ``quant`` section — decode tok/s for
     bf16 vs the frozen-4-bit lut4/int4 decode paths on one scenario,
-    whose presence (all three rows) ``compare.py`` also gates — and an
-    ``observability`` section — tracing-on vs tracing-off decode tok/s
+    whose presence (all three rows) ``compare.py`` also gates — a
+    ``spec`` section — speculative decoding (baseline vs ngram vs
+    self_lut on periodic prompts: acceptance rate, drafted/accepted
+    counts, effective tok/s vs baseline), gated by
+    ``compare.check_spec_section`` — and an ``observability`` section — tracing-on vs tracing-off decode tok/s
     (gated at ratio >= 0.97) plus trace event counts reconciled against
     token counts; its consistency run's Perfetto trace and Prometheus
     dump land in ``TRACE_engine.json`` / ``METRICS_engine.prom``.
@@ -559,7 +609,7 @@ def bench_json(path: str = "BENCH_engine.json", batches=DEF_BATCHES,
 
     out = {"model_quant": quant, "max_seq": max_seq, "ticks": ticks,
            "per_batch": {}, "recurrent": {}, "prefix": {}, "latency": {},
-           "quant": {}}
+           "quant": {}, "spec": {}}
     for mb in batches:
         cfg, eng = _build(quant, mb, max_seq)
         decode_tok_s = _steady_decode_tok_s(eng, cfg, mb, ticks, max_seq)
@@ -605,6 +655,7 @@ def bench_json(path: str = "BENCH_engine.json", batches=DEF_BATCHES,
     out["prefix"] = prefix_shared_system_prompt(quant=quant)
     out["latency"] = priority_mixed_load(quant=quant)
     out["quant"] = quant_decode_modes(batch=4, ticks=ticks, max_seq=max_seq)
+    out["spec"] = speculative_decode(batch=4, ticks=ticks, max_seq=max_seq)
     out["sustained"] = sustained_load()
     out["observability"] = observability_overhead(
         quant=quant, trace_path="TRACE_engine.json",
@@ -628,6 +679,9 @@ def sustained_load(report_path: str = "LOAD_harness.json") -> dict:
                                          run_threaded, sustained_report)
 
     out = sustained_report()
+    # the same overload trace with speculative decoding on: priority
+    # split and positive goodput must survive draft/verify/rollback
+    out.update(sustained_report(arches=("yi-9b",), spec="ngram"))
     for arch, rep in out.items():
         print(f"engine_json_sustained_{arch},0,"
               f"goodput_tok_s={rep['goodput_tok_s']:.1f};"
@@ -666,7 +720,7 @@ def smoke() -> None:
 ALL = [decode_throughput, decode_paged_vs_dense, prefill_batched_vs_per_row,
        long_prompt_interleave, recurrent_long_prompt_interleave,
        prefix_shared_system_prompt, priority_mixed_load, quant_decode_modes,
-       observability_overhead]
+       speculative_decode, observability_overhead]
 
 
 def main() -> None:

@@ -249,18 +249,23 @@ def build_engine(arch: str = "yi-9b", *, clock=None, max_batch: int = 2,
 
 def sustained_report(arches=("yi-9b", "mamba2-1.3b"), n: int = 48,
                      rate: float = 100.0, tick_cost_s: float = 0.01,
-                     seed: int = 0) -> dict:
+                     seed: int = 0, spec: str | None = None) -> dict:
     """The gated sustained-load numbers: per arch, one deterministic
     virtual-time overload run (arrival rate far above service capacity so
     the scheduler's priority/deadline machinery is actually exercised).
     Deadline budgets are sized so the low-priority class misses under
-    overload while high-priority work mostly holds."""
+    overload while high-priority work mostly holds.  ``spec`` runs the
+    engines with that speculative draft proposer (report keys become
+    ``<arch>+spec_<mode>``) — the scheduler properties must hold under
+    draft/verify/rollback too."""
     out = {}
+    knobs = {"spec": spec} if spec else {}
     for arch in arches:
-        eng, cfg = build_engine(arch, clock=VirtualClock())
+        eng, cfg = build_engine(arch, clock=VirtualClock(), **knobs)
         trace = make_trace(n, rate, cfg.vocab_size, seed=seed,
                            deadline_budgets={0: 0.8, 1: 0.5})
-        out[arch] = run_virtual(eng, trace, tick_cost_s=tick_cost_s)
+        key = f"{arch}+spec_{spec}" if spec else arch
+        out[key] = run_virtual(eng, trace, tick_cost_s=tick_cost_s)
     return out
 
 
@@ -271,6 +276,11 @@ def main():
     ap.add_argument("--rate", type=float, default=100.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--tick-cost-s", type=float, default=0.01)
+    ap.add_argument("--spec", default=None,
+                    help="speculative draft proposer for the run "
+                         "('ngram' or 'self_lut'; default off)")
+    ap.add_argument("--spec-k", type=int, default=None,
+                    help="max drafts per request per tick under --spec")
     ap.add_argument("--threaded", action="store_true",
                     help="also run the real background-loop drive")
     ap.add_argument("--time-scale", type=float, default=0.02,
@@ -288,6 +298,11 @@ def main():
     report = {"arch": args.arch, "requests": args.requests,
               "rate_rps": args.rate, "seed": args.seed}
     knobs = {"trace": True} if args.trace_out else {}
+    if args.spec:
+        knobs["spec"] = args.spec
+        report["spec"] = args.spec
+        if args.spec_k is not None:
+            knobs["spec_k"] = args.spec_k
     eng, cfg = build_engine(args.arch, clock=VirtualClock(), **knobs)
     trace = make_trace(args.requests, args.rate, cfg.vocab_size,
                        seed=args.seed, deadline_budgets={0: 0.8, 1: 0.5})

@@ -14,10 +14,16 @@ freeze non-affine NF4 weights (D&C + full or pruned residual correction);
 any other spelling (``luna_*``, ``int8``, ``lut_nf4``, ``bf16``) is a
 model-level ``QuantConfig`` mode applied dynamically to every projection.
 
+``--spec ngram|self_lut`` (greedy-only) turns on speculative decoding:
+drafts verified in one batched window, accepted prefixes emitted in
+bulk, token-identical to plain greedy — see ``docs/speculative.md``.
+
 Run:  PYTHONPATH=src python examples/serve_luna.py --quant luna_approx2 \
           --sampling top_k --top-k 20
       PYTHONPATH=src python examples/serve_luna.py --quant lut4
       PYTHONPATH=src python examples/serve_luna.py --quant nf4
+      PYTHONPATH=src python examples/serve_luna.py --quant nf4p \
+          --spec self_lut            # drafts alias the decode LUT tree
 """
 import argparse
 import os

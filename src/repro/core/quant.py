@@ -319,3 +319,25 @@ def quantize_decode_params(params, quant: str):
         return node
 
     return walk(params, ())
+
+
+#: the draft-weight mode for self-speculative decoding: the pruned-LUT NF4
+#: tree is the cheapest decode path the engine owns, and LoCalut's
+#: capacity-computation tradeoff says that is exactly where to spend the
+#: draft budget — table bytes for draft throughput, full precision verifies.
+SPEC_DRAFT_QUANT = "nf4p"
+
+
+def quantize_draft_params(params, quant: str = SPEC_DRAFT_QUANT):
+    """Draft-model weights for self-speculative decoding.
+
+    The drafter is the SAME model with its decode projections frozen in
+    their pruned-LUT form (default :data:`SPEC_DRAFT_QUANT`): no second
+    set of trained weights, no separate cache layout — the draft step runs
+    ``decode_step`` over this tree against a throwaway copy of the live
+    caches while the full-precision tree scores the drafted window in one
+    batched verify pass.  When the engine already decodes at the draft
+    mode (``EngineConfig(quant="nf4p")``) the engine aliases its decode
+    tree instead of calling this twice.
+    """
+    return quantize_decode_params(params, quant)

@@ -9,6 +9,11 @@
   # non-affine NF4 decode (D&C + residual correction; nf4p = pruned):
   PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --quant nf4
 
+  # speculative decoding (greedy-only; see docs/speculative.md):
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --spec ngram
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-9b \
+      --spec self_lut --spec-k 4     # nf4p LUT drafts, full-prec verify
+
 Engine knobs are single-sourced in ``repro.serve.config.EngineConfig`` —
 ``EngineConfig.add_cli_args`` registers the flags (including the shared
 ``--quant``), ``from_args`` builds the validated config.  ``--quant

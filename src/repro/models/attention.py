@@ -15,8 +15,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.layers import quant_matmul
-from repro.models.common import (apply_rope, dense_init, paged_gather,
-                                 paged_write)
+from repro.models.common import (apply_rope, dense_init, dense_write_window,
+                                 paged_gather, paged_write,
+                                 paged_write_window)
 
 
 class KVCache(NamedTuple):
@@ -187,14 +188,17 @@ def gqa_attention(params, x: jax.Array, cfg, *, positions: jax.Array,
                   cache: KVCache | None = None, cache_index=None,
                   causal: bool = True, kv_x: jax.Array | None = None,
                   rope: bool = True, num_heads=None, num_kv_heads=None,
-                  head_dim=None, impl=None, block_table=None):
+                  head_dim=None, impl=None, block_table=None, n_valid=None):
     """Returns (out (B,S,D), new_cache).
 
     ``kv_x``: cross-attention source (encoder output); disables cache rope.
     ``block_table``: (B, nblk) int32 — the cache leaves are then paged
     pools (num_blocks, block_size, ...) instead of dense (B, S, ...) slabs;
     decode writes at ``table[row, pos // bs]`` and attends over the gathered
-    logical-order view (decode-only, S == 1).
+    logical-order view.  With per-row ``cache_index`` the decode write may
+    carry an S > 1 token window (speculative verify); ``n_valid``: optional
+    (B,) count of real window tokens per row — the rest write nowhere and
+    are masked out of attention via ``kv_len``.
     """
     b, s, d = x.shape
     h = num_heads or cfg.num_heads
@@ -232,16 +236,25 @@ def gqa_attention(params, x: jax.Array, cfg, *, positions: jax.Array,
                         KVCache(k_all, v_all))
         if block_table is not None:
             # paged decode: write the new KV at the row's logical depth via
-            # the block table, attend over the gathered logical-order view
-            assert s == 1, "paged block_table is decode-only (S == 1)"
+            # the block table, attend over the gathered logical-order view;
+            # S > 1 is a speculative verify window (junk columns beyond
+            # n_valid are OOB-dropped by the scatter and masked by kv_len)
             idx = jnp.asarray(cache_index, jnp.int32) \
                 + jnp.zeros((b,), jnp.int32)
-            k_pool = paged_write(cache.k, k, block_table, idx)
-            v_pool = paged_write(cache.v, v, block_table, idx)
+            if s == 1 and n_valid is None:
+                k_pool = paged_write(cache.k, k, block_table, idx)
+                v_pool = paged_write(cache.v, v, block_table, idx)
+            else:
+                k_pool = paged_write_window(cache.k, k, block_table, idx,
+                                            n_valid)
+                v_pool = paged_write_window(cache.v, v, block_table, idx,
+                                            n_valid)
+            valid = s if n_valid is None else n_valid
             new_cache = KVCache(k_pool, v_pool)
             k = paged_gather(k_pool, block_table)
             v = paged_gather(v_pool, block_table)
-            out = sdpa(q, k, v, causal=causal, q_offset=idx, kv_len=idx + 1,
+            out = sdpa(q, k, v, causal=causal, q_offset=idx,
+                       kv_len=idx + valid,
                        impl=impl or cfg.attn_impl, chunk=cfg.attn_chunk,
                        unroll=not cfg.scan_layers, f32_operands=cfg.attn_f32,
                        fused_mask=cfg.attn_fused_mask,
@@ -251,13 +264,17 @@ def gqa_attention(params, x: jax.Array, cfg, *, positions: jax.Array,
                     new_cache)
         if getattr(cache_index, "ndim", 0) == 1:
             # per-row decode positions: every slab row writes its new KV at
-            # its own depth (single batched scatter, static shapes)
-            assert s == 1, "per-row cache_index is decode-only (S == 1)"
-            rows = jnp.arange(b)
-            k_all = cache.k.at[rows, cache_index].set(
-                k[:, 0].astype(cache.k.dtype))
-            v_all = cache.v.at[rows, cache_index].set(
-                v[:, 0].astype(cache.v.dtype))
+            # its own depth (single batched scatter, static shapes); S > 1
+            # is a speculative verify window
+            if s == 1 and n_valid is None:
+                rows = jnp.arange(b)
+                k_all = cache.k.at[rows, cache_index].set(
+                    k[:, 0].astype(cache.k.dtype))
+                v_all = cache.v.at[rows, cache_index].set(
+                    v[:, 0].astype(cache.v.dtype))
+            else:
+                k_all = dense_write_window(cache.k, k, cache_index, n_valid)
+                v_all = dense_write_window(cache.v, v, cache_index, n_valid)
         else:
             k_all = jax.lax.dynamic_update_slice(
                 cache.k, k.astype(cache.k.dtype), (0, cache_index, 0, 0))
@@ -265,7 +282,7 @@ def gqa_attention(params, x: jax.Array, cfg, *, positions: jax.Array,
                 cache.v, v.astype(cache.v.dtype), (0, cache_index, 0, 0))
         new_cache = KVCache(k_all, v_all)
         k, v = k_all, v_all
-        kv_len = cache_index + s
+        kv_len = cache_index + (s if n_valid is None else n_valid)
         q_offset = cache_index
 
     out = sdpa(q, k, v, causal=causal and kv_x is None, q_offset=q_offset,
@@ -303,13 +320,14 @@ def init_mla(key, cfg):
 
 def mla_attention(params, x: jax.Array, cfg, *, positions: jax.Array,
                   cache: KVCache | None = None, cache_index=None,
-                  block_table=None):
+                  block_table=None, n_valid=None):
     """MLA with the compressed-cache decode path.
 
     Cache stores (c_kv (B,S,R), k_rope (B,S,dr)) — the 'absorbed' form keeps
     decode FLOPs at O(R + dr) per head instead of materializing per-head K/V.
     ``block_table``: (B, nblk) — cache leaves are paged pools
-    (num_blocks, block_size, R) / (num_blocks, block_size, dr); see
+    (num_blocks, block_size, R) / (num_blocks, block_size, dr); ``n_valid``:
+    (B,) real-token counts for an S > 1 speculative verify window; see
     :func:`gqa_attention`.
     """
     m = cfg.mla
@@ -356,23 +374,33 @@ def mla_attention(params, x: jax.Array, cfg, *, positions: jax.Array,
                     KVCache(c_all, r_all))
     if cache is not None:
         if block_table is not None:
-            assert s == 1, "paged block_table is decode-only (S == 1)"
             idx = jnp.asarray(cache_index, jnp.int32) \
                 + jnp.zeros((b,), jnp.int32)
-            c_all = paged_write(cache.k, c_kv, block_table, idx)
-            r_all = paged_write(cache.v, k_rope, block_table, idx)
+            if s == 1 and n_valid is None:
+                c_all = paged_write(cache.k, c_kv, block_table, idx)
+                r_all = paged_write(cache.v, k_rope, block_table, idx)
+            else:
+                c_all = paged_write_window(cache.k, c_kv, block_table, idx,
+                                           n_valid)
+                r_all = paged_write_window(cache.v, k_rope, block_table, idx,
+                                           n_valid)
             new_cache = KVCache(c_all, r_all)
             c_kv = paged_gather(c_all, block_table)
             k_rope = paged_gather(r_all, block_table)
-            kv_len = idx + 1
+            kv_len = idx + (s if n_valid is None else n_valid)
             q_offset = idx
         elif getattr(cache_index, "ndim", 0) == 1:
-            assert s == 1, "per-row cache_index is decode-only (S == 1)"
-            rows = jnp.arange(b)
-            c_all = cache.k.at[rows, cache_index].set(
-                c_kv[:, 0].astype(cache.k.dtype))
-            r_all = cache.v.at[rows, cache_index].set(
-                k_rope[:, 0].astype(cache.v.dtype))
+            if s == 1 and n_valid is None:
+                rows = jnp.arange(b)
+                c_all = cache.k.at[rows, cache_index].set(
+                    c_kv[:, 0].astype(cache.k.dtype))
+                r_all = cache.v.at[rows, cache_index].set(
+                    k_rope[:, 0].astype(cache.v.dtype))
+            else:
+                c_all = dense_write_window(cache.k, c_kv, cache_index,
+                                           n_valid)
+                r_all = dense_write_window(cache.v, k_rope, cache_index,
+                                           n_valid)
         else:
             c_all = jax.lax.dynamic_update_slice(
                 cache.k, c_kv.astype(cache.k.dtype), (0, cache_index, 0))
@@ -381,7 +409,7 @@ def mla_attention(params, x: jax.Array, cfg, *, positions: jax.Array,
         if block_table is None:
             new_cache = KVCache(c_all, r_all)
             c_kv, k_rope = c_all, r_all
-            kv_len = cache_index + s
+            kv_len = cache_index + (s if n_valid is None else n_valid)
             q_offset = cache_index
 
     sk = c_kv.shape[1]

@@ -109,6 +109,50 @@ def paged_write(pool: jax.Array, new: jax.Array, block_table: jax.Array,
     return pool.at[phys, idx % bs].set(new[:, 0].astype(pool.dtype))
 
 
+def dense_write_window(cache: jax.Array, new: jax.Array, index: jax.Array,
+                       n_valid: jax.Array | None = None) -> jax.Array:
+    """Scatter an S-token window per row into a dense (B, S_max, ...) slab.
+
+    ``new``: (B, S, ...); ``index``: (B,) per-row start positions — row
+    ``b``'s token ``i`` lands at ``index[b] + i``.  ``n_valid``: optional
+    (B,) count of REAL tokens per row; entries at or beyond it are routed
+    to an out-of-bounds index and DROPPED (speculative verify windows mix
+    rows with different draft counts — junk columns must write nowhere,
+    not clamp onto committed positions).
+    """
+    b, s = new.shape[0], new.shape[1]
+    idx = jnp.asarray(index, jnp.int32)[:, None] + jnp.arange(s)[None, :]
+    if n_valid is not None:
+        ok = jnp.arange(s)[None, :] < jnp.asarray(n_valid,
+                                                  jnp.int32)[:, None]
+        idx = jnp.where(ok, idx, cache.shape[1])
+    rows = jnp.arange(b)[:, None]
+    return cache.at[rows, idx].set(new.astype(cache.dtype), mode="drop")
+
+
+def paged_write_window(pool: jax.Array, new: jax.Array,
+                       block_table: jax.Array, index: jax.Array,
+                       n_valid: jax.Array | None = None) -> jax.Array:
+    """:func:`paged_write` generalized to an S-token window per row.
+
+    ``new``: (B, S, ...); ``index``: (B,) per-row logical start positions.
+    ``n_valid``: optional (B,) count of real tokens — invalid window
+    entries get the out-of-bounds physical id ``num_blocks`` and are
+    DROPPED by the scatter, so a row's junk columns can never collide
+    with another row's committed KV (clamping would).
+    """
+    b, s = new.shape[0], new.shape[1]
+    bs = pool.shape[1]
+    idx = jnp.asarray(index, jnp.int32)[:, None] + jnp.arange(s)[None, :]
+    col = jnp.clip(idx // bs, 0, block_table.shape[1] - 1)
+    phys = jnp.take_along_axis(block_table, col, axis=1)        # (B, S)
+    if n_valid is not None:
+        ok = jnp.arange(s)[None, :] < jnp.asarray(n_valid,
+                                                  jnp.int32)[:, None]
+        phys = jnp.where(ok, phys, pool.shape[0])
+    return pool.at[phys, idx % bs].set(new.astype(pool.dtype), mode="drop")
+
+
 def gather_last(hidden: jax.Array, last_pos) -> jax.Array:
     """hidden: (B, S, D) -> (B, 1, D) at per-row ``last_pos`` (B,) (the last
     REAL token of each row in a right-padded prefill batch)."""

@@ -56,7 +56,7 @@ class HybridLM:
         }
 
     def _shared_attn(self, params, x, positions, cache, cache_index,
-                     block_table=None):
+                     block_table=None, n_valid=None):
         cfg = self.cfg
         hc = cfg.hybrid
         p = params["shared"]
@@ -66,14 +66,15 @@ class HybridLM:
             num_heads=hc.shared_num_heads,
             num_kv_heads=hc.shared_num_kv_heads,
             head_dim=cfg.d_model // hc.shared_num_heads,
-            block_table=block_table)
+            block_table=block_table, n_valid=n_valid)
         x = x + a
         f = mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg,
                 mlp_type="swiglu")
         return x + f, new_cache
 
     def forward(self, params, tokens, *, caches=None, cache_index=0,
-                training=False, last_pos=None, block_tables=None):
+                training=False, last_pos=None, block_tables=None,
+                n_valid=None):
         cfg = self.cfg
         hc = cfg.hybrid
         x = params["embed"][tokens]
@@ -102,7 +103,8 @@ class HybridLM:
         for g in range(self.num_groups):
             ac = attn_caches[g] if attn_caches is not None else None
             x, nac = self._shared_attn(params, x, positions, ac, cache_index,
-                                       block_table=block_tables)
+                                       block_table=block_tables,
+                                       n_valid=n_valid)
             new_attn_caches.append(nac)
             n_in_group = min(hc.period, cfg.num_layers - layer0)
             p_g = jax.tree.map(lambda a: a[layer0:layer0 + n_in_group],
@@ -201,5 +203,25 @@ class HybridLM:
         hidden, new_caches = self.forward(params, token, caches=state,
                                           cache_index=index,
                                           block_tables=tables)
+        logits = quant_matmul(hidden, params["lm_head"], None)
+        return logits, new_caches
+
+    def decode_window(self, params, tokens, state, index, *, tables=None,
+                      n_valid=None, last_pos=None):
+        """Speculative verify/commit over a (B, W) window on the SPLIT
+        substrate: the shared attention block writes the window at per-row
+        depths (``n_valid`` columns real, the rest dropped + masked), the
+        mamba layers run the masked SSD scan bounded by ``last_pos`` —
+        verify uses ``last_pos = n_valid - 1``, a partial-accept commit
+        re-runs from the pre-verify tree with ``last_pos = accepts`` (the
+        attention half then rewrites identical values at positions <= the
+        accept point; its rejected KV beyond is dead weight)."""
+        if last_pos is None and n_valid is not None:
+            last_pos = jnp.asarray(n_valid, jnp.int32) - 1
+        hidden, new_caches = self.forward(params, tokens, caches=state,
+                                          cache_index=index,
+                                          last_pos=last_pos,
+                                          block_tables=tables,
+                                          n_valid=n_valid)
         logits = quant_matmul(hidden, params["lm_head"], None)
         return logits, new_caches

@@ -50,8 +50,16 @@ def _capacity(group_tokens: int, cfg) -> int:
     return min(group_tokens, max(4, (cap + 3) // 4 * 4))
 
 
-def moe_ffn(params, x: jax.Array, cfg):
-    """x: (B, S, D) -> (out, aux_loss)."""
+def moe_ffn(params, x: jax.Array, cfg, *, window: bool = False):
+    """x: (B, S, D) -> (out, aux_loss).
+
+    ``window=True``: x is a speculative verify/commit window, not a
+    prefill — group by COLUMN (S groups of B tokens) so the tokens at
+    window offset j compete for expert capacity exactly like the plain
+    decode tick that would have processed them (same group size, same
+    capacity, so the no-drop regime is identical).  Row-grouping would
+    make a token's routing depend on its own row's draft width.
+    """
     mc = cfg.moe
     b, s, d = x.shape
     e = mc.num_experts
@@ -59,6 +67,8 @@ def moe_ffn(params, x: jax.Array, cfg):
     # capacity stays ~top_k/E per token instead of all-experts-per-token
     if s == 1:
         xg_in = x.reshape(1, b, d)
+    elif window:
+        xg_in = x.transpose(1, 0, 2)
     else:
         xg_in = x
     g, n, _ = xg_in.shape
@@ -98,6 +108,8 @@ def moe_ffn(params, x: jax.Array, cfg):
             ys.reshape(-1, d))
 
     out = jax.vmap(scatter_g)(yg, sel_idx)                      # (G, N, D)
+    if s > 1 and window:
+        out = out.transpose(1, 0, 2)
     out = out.reshape(b, s, d)
 
     if mc.num_shared:

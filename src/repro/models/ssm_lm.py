@@ -119,3 +119,27 @@ class SSMLM:
                                           cache_index=index)
         logits = quant_matmul(hidden, params["lm_head"], None)
         return logits, new_caches
+
+    def decode_window(self, params, tokens, state, index, *, tables=None,
+                      n_valid=None, last_pos=None):
+        """Speculative verify/commit over a (B, W) token window via the
+        masked SSD scan continuing from the carried recurrent state.
+
+        The recurrence cannot rewind, so ``last_pos`` (B,) bounds what
+        ENTERS the state: positions beyond it are dt-masked (state frozen,
+        contribution zero) while their causal outputs still score the
+        window.  Verify passes ``last_pos = n_valid - 1`` (score all
+        drafts); a partial-accept commit re-runs from the pre-verify tree
+        with ``last_pos = accepts`` so exactly the accepted prefix enters
+        the state.  A row with ``last_pos = -1`` is fully masked — its
+        conv window and SSD state pass through unchanged.  ``n_valid`` is
+        accepted for signature uniformity (attention families use it) and
+        folded into the default ``last_pos`` when one isn't given."""
+        assert tables is None, "ssm caches are dense (no block table)"
+        if last_pos is None and n_valid is not None:
+            last_pos = jnp.asarray(n_valid, jnp.int32) - 1
+        hidden, new_caches = self.forward(params, tokens, caches=state,
+                                          cache_index=index,
+                                          last_pos=last_pos)
+        logits = quant_matmul(hidden, params["lm_head"], None)
+        return logits, new_caches

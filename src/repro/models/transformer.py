@@ -42,21 +42,24 @@ def _block_init(key, cfg, *, use_moe: bool, d_ff: int | None = None):
 
 
 def _block_apply(p, x, cfg, *, positions, cache, cache_index, use_moe: bool,
-                 block_tables=None):
+                 block_tables=None, n_valid=None):
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
     if cfg.mla:
         a, new_cache = attn_mod.mla_attention(
             p["attn"], h, cfg, positions=positions, cache=cache,
-            cache_index=cache_index, block_table=block_tables)
+            cache_index=cache_index, block_table=block_tables,
+            n_valid=n_valid)
     else:
         a, new_cache = attn_mod.gqa_attention(
             p["attn"], h, cfg, positions=positions, cache=cache,
-            cache_index=cache_index, block_table=block_tables)
+            cache_index=cache_index, block_table=block_tables,
+            n_valid=n_valid)
     x = x + a
     h = rms_norm(x, p["ln2"], cfg.norm_eps)
     aux = jnp.zeros((), jnp.float32)
     if use_moe:
-        f, aux = moe_mod.moe_ffn(p["moe"], h, cfg)
+        f, aux = moe_mod.moe_ffn(p["moe"], h, cfg,
+                                 window=n_valid is not None)
     else:
         f = mlp(p["mlp"], h, cfg)
     return x + f, new_cache, aux
@@ -94,7 +97,7 @@ class TransformerLM:
 
     # ---------------- forward ----------------
     def _scan_blocks(self, params, x, *, positions, caches, cache_index,
-                     training: bool, block_tables=None):
+                     training: bool, block_tables=None, n_valid=None):
         cfg = self.cfg
         use_moe = cfg.moe is not None
         from repro.parallel.act_sharding import shard_hidden
@@ -106,7 +109,7 @@ class TransformerLM:
             h2, new_cache, aux_i = _block_apply(
                 p_i, h, cfg, positions=positions, cache=cache_i,
                 cache_index=cache_index, use_moe=use_moe,
-                block_tables=block_tables)
+                block_tables=block_tables, n_valid=n_valid)
             return (shard_hidden(h2), aux + aux_i), new_cache
 
         if training and cfg.remat:
@@ -139,7 +142,8 @@ class TransformerLM:
         return x, aux, new_caches
 
     def forward(self, params, tokens=None, *, embeds=None, caches=None,
-                cache_index=0, training: bool = False, block_tables=None):
+                cache_index=0, training: bool = False, block_tables=None,
+                n_valid=None):
         """Returns (hidden (B,S,D), aux, new_caches)."""
         cfg = self.cfg
         if embeds is None:
@@ -158,14 +162,14 @@ class TransformerLM:
             x, nc, _ = _block_apply(
                 params["dense_blocks"][i], x, cfg, positions=positions,
                 cache=c, cache_index=cache_index, use_moe=False,
-                block_tables=block_tables)
+                block_tables=block_tables, n_valid=n_valid)
             new_dense_caches.append(nc)
         x, aux, new_scan = self._scan_blocks(
             params, x, positions=positions,
             caches=scan_caches if scan_caches is not None else _none_caches(
                 cfg.num_layers - n_dense),
             cache_index=cache_index, training=training,
-            block_tables=block_tables)
+            block_tables=block_tables, n_valid=n_valid)
         x = rms_norm(x, params["ln_f"], cfg.norm_eps)
         new_caches = (new_dense_caches, new_scan) if caches is not None else None
         return x, aux, new_caches
@@ -253,6 +257,25 @@ class TransformerLM:
         hidden, _, new_caches = self.forward(
             params, token, caches=state, cache_index=index,
             block_tables=tables)
+        return self.logits(params, hidden), new_caches
+
+    def decode_window(self, params, tokens, state, index, *, tables=None,
+                      n_valid=None, last_pos=None):
+        """Speculative verify: score a (B, W) window of already-chosen
+        tokens in ONE batched forward.  ``index``: (B,) per-row positions
+        of window column 0; ``n_valid``: (B,) real tokens per row (the
+        rest write nowhere and are masked out of attention — inactive rows
+        pass 0 and touch nothing).  ``last_pos`` is accepted for signature
+        uniformity with the recurrent families and ignored: KV beyond a
+        row's rewound pointer is dead weight the next writes overwrite, so
+        the verify-pass cache IS the committed cache at any accept length.
+
+        Returns (logits (B, W, V), new_caches) — logits[:, i] scores the
+        token AFTER window column i."""
+        del last_pos
+        hidden, _, new_caches = self.forward(
+            params, tokens, caches=state, cache_index=index,
+            block_tables=tables, n_valid=n_valid)
         return self.logits(params, hidden), new_caches
 
 

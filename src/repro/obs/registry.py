@@ -36,6 +36,11 @@ ITL_BUCKETS = (0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25,
                0.5, 1.0)
 PHASE_BUCKETS = (1e-5, 2.5e-5, 5e-5, 1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3,
                  5e-3, 1e-2, 2.5e-2, 5e-2, 0.1, 0.5, 1.0)
+#: token-count grids for the speculative-decoding histograms: accepted
+#: drafts per verify window (bounded by spec_k) and accepted/rejected
+#: totals per retired request
+SPEC_WINDOW_BUCKETS = (0.0, 1.0, 2.0, 4.0, 8.0, 16.0)
+SPEC_REQUEST_BUCKETS = (0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0)
 
 
 def _label_key(labels: dict) -> tuple:

@@ -35,7 +35,7 @@ REQUEST_EVENTS = ("submit", "queue", "admit", "prefill_chunk",
                   "first_token", "token", "preempt", "cancel", "finish")
 
 #: engine-track phase names (complete spans, one lane each)
-PHASE_EVENTS = ("admit", "prefill", "decode", "emit")
+PHASE_EVENTS = ("admit", "prefill", "decode", "draft", "verify", "emit")
 
 _ENGINE_PID = 0
 _REQUEST_PID = 1

@@ -207,6 +207,23 @@ class CacheBackend:
     def free_slot(self, slot: int) -> None:
         """Return a slot's substrate resources (no-op for dense rows)."""
 
+    def rollback(self, slot: int, n: int) -> None:
+        """Discard the last ``n`` REJECTED speculative tokens of ``slot``.
+
+        Every substrate supports this; what it costs differs.  Dense
+        attention rows are position-indexed: the engine rewinds the
+        slot's decode pointer and the rejected KV beyond it becomes dead
+        weight the next writes overwrite — rollback is pure bookkeeping
+        (kv_len masking already hides the junk from attention).  The
+        recurrent substrates override the DOC, not the mechanics: their
+        state cannot rewind positionally, so the engine re-commits it
+        from the pre-verify cache tree with the SSD scan masked at the
+        accept boundary (``Engine._spec_tick``); the backend-level call
+        still runs to assert the locking discipline and validate the
+        slot's accounting."""
+        self._assert_owned()
+        assert n >= 0, n
+
     def slot_blocks(self, slot: int) -> list[int]:
         return []
 
@@ -274,6 +291,16 @@ class RecurrentState(DenseSlab):
     prefix cache snapshots (conv, ssd) rows at capture-grid boundaries."""
 
     needs_state = True
+
+    def rollback(self, slot: int, n: int) -> None:
+        """Recurrent state has no positions to rewind: a rejected draft's
+        contribution is kept OUT of the state rather than removed from it
+        — the engine's commit pass re-runs the window from the pre-verify
+        tree with dt masked beyond the accept boundary (state frozen,
+        rejected tokens contribute exactly zero), which is what the
+        fixed-size ``state_snapshot`` machinery already guarantees is
+        sufficient to reconstruct any boundary.  Bookkeeping-only here."""
+        super().rollback(slot, n)
 
     def snapshot(self, caches, row: int = 0):
         return self.model.state_snapshot(caches, row)
@@ -357,6 +384,18 @@ class PagedPool(CacheBackend):
             self.allocator.release(self._slot_blocks[slot])
             self._slot_blocks[slot] = []
             self.block_tables[slot, :] = GARBAGE_BLOCK
+
+    def rollback(self, slot, n):
+        """Rejected drafts occupied block-table positions beyond the
+        rewound pointer.  Blocks are reserved for the request's LIFETIME
+        budget at admission, so nothing is freed and the table is not
+        truncated — the rewound positions stay inside the reservation by
+        construction (the engine's window clamp), and the junk KV there
+        is overwritten as the row re-advances.  Validates the accounting
+        instead of mutating it."""
+        super().rollback(slot, n)
+        assert n == 0 or self._slot_blocks[slot], \
+            f"rollback({slot}, {n}) on a slot with no reservation"
 
     def slot_blocks(self, slot):
         return self._slot_blocks[slot]
@@ -442,6 +481,15 @@ class HybridComposite(PagedPool):
     payloads exist only at block-aligned prompt lengths."""
 
     needs_state = True
+
+    def rollback(self, slot, n):
+        """Split-substrate rollback composes both halves: the paged
+        attention KV beyond the rewound pointer is dead weight inside the
+        slot's lifetime reservation (PagedPool semantics), and the
+        recurrent half is re-committed by the engine from the pre-verify
+        tree with the scan masked at the accept boundary (RecurrentState
+        semantics).  The PagedPool accounting check applies."""
+        super().rollback(slot, n)
 
     def snapshot(self, caches, row: int = 0):
         return self.model.state_snapshot(caches, row)

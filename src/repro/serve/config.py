@@ -34,6 +34,15 @@ from repro.serve.sampling import SamplingConfig
 #: a magnitude threshold for nf4p (table capacity vs bounded accuracy).
 ENGINE_QUANT_MODES = ("lut4", "int4", "nf4", "nf4p")
 
+#: speculative-decoding draft proposers (EngineConfig.spec).  "ngram" is
+#: prompt-lookup drafting (no extra weights: the longest context-suffix
+#: n-gram is matched against earlier prompt+output text and its
+#: continuation proposed); "self_lut" is self-speculation — the SAME model
+#: runs its decode step over pruned-LUT ``nf4p`` weights as the cheap
+#: drafter while full precision verifies (LoCalut's capacity-computation
+#: tradeoff applied to serving).  See ``docs/speculative.md``.
+ENGINE_SPEC_MODES = ("ngram", "self_lut")
+
 
 @dataclass(frozen=True)
 class EngineConfig:
@@ -74,6 +83,13 @@ class EngineConfig:
       buffer of ``trace_buffer`` events, exportable as Perfetto JSON.
       Off by default (a disabled tracer is a cheap early-return); see
       ``docs/observability.md``.
+    * ``spec`` / ``spec_k`` — speculative decoding: each tick drafts up
+      to ``spec_k`` tokens per active request (``"ngram"`` prompt-lookup
+      or ``"self_lut"`` self-speculation over nf4p LUT weights), scores
+      the whole window in ONE batched verify pass, emits the accepted
+      prefix plus the verifier's correction, and rolls back the rest.
+      Greedy-only (acceptance is pinned token-identical to
+      non-speculative greedy); see ``docs/speculative.md``.
     """
     max_batch: int = 8
     max_seq: int = 256
@@ -91,6 +107,8 @@ class EngineConfig:
     idle_backoff_s: float = 0.002
     trace: bool = False
     trace_buffer: int = 65536
+    spec: str | None = None
+    spec_k: int = 4
 
     def __post_init__(self):
         if self.quant is not None and self.quant not in ENGINE_QUANT_MODES:
@@ -123,6 +141,19 @@ class EngineConfig:
         if self.trace_buffer < 1:
             raise ValueError(f"trace_buffer must be >= 1, "
                              f"got {self.trace_buffer}")
+        if self.spec is not None and self.spec not in ENGINE_SPEC_MODES:
+            raise ValueError(
+                f"spec must be one of {ENGINE_SPEC_MODES} or None, "
+                f"got {self.spec!r}")
+        if self.spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {self.spec_k}")
+        if self.spec is not None and self.sampling is not None \
+                and self.sampling.mode != "greedy":
+            raise ValueError(
+                "speculative decoding is greedy-only (acceptance is pinned "
+                "token-identical to non-speculative greedy argmax); got "
+                f"spec={self.spec!r} with sampling mode "
+                f"{self.sampling.mode!r}")
 
     # --- family cross-validation ----------------------------------------
     def validate(self, family: str) -> None:
@@ -200,6 +231,16 @@ class EngineConfig:
         ap.add_argument("--metrics-dump", default=None, metavar="PATH",
                         help="write the Prometheus text exposition to PATH "
                              "on exit")
+        ap.add_argument("--spec", default=None,
+                        choices=list(ENGINE_SPEC_MODES),
+                        help="speculative decoding draft proposer: 'ngram' "
+                             "(prompt-lookup, no extra weights) or "
+                             "'self_lut' (self-speculation: the same model "
+                             "over pruned nf4p LUT weights drafts, full "
+                             "precision verifies); greedy-only")
+        ap.add_argument("--spec-k", type=int, default=None,
+                        help="max draft tokens per request per tick "
+                             "(speculation window = spec_k + 1)")
         ap.add_argument("--sampling", default="greedy",
                         choices=["greedy", "temperature", "top_k"])
         ap.add_argument("--temperature", type=float, default=1.0)

@@ -90,13 +90,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.registry import get_model
-from repro.obs import (ITL_BUCKETS, PHASE_BUCKETS, TTFT_BUCKETS,
-                       MetricsRegistry, Tracer)
+from repro.obs import (ITL_BUCKETS, PHASE_BUCKETS, SPEC_REQUEST_BUCKETS,
+                       SPEC_WINDOW_BUCKETS, TTFT_BUCKETS, MetricsRegistry,
+                       Tracer)
 from repro.serve.backend import make_backend
 from repro.serve.config import EngineConfig
 from repro.serve.paged import ceil_div
 from repro.serve.prefix_cache import PrefixCache
 from repro.serve.sampling import SamplingConfig, sample
+from repro.serve.spec import accept_length
 
 
 @dataclass(eq=False)
@@ -131,6 +133,10 @@ class Request:
     # (submit_ts alone can't carry this — harnesses pre-pin arrival
     # stamps, and a backpressured submit() retry must not double-count)
     _submit_seen: bool = field(default=False, repr=False)
+    # engine-internal speculative-decoding tallies, observed into the
+    # per-request histograms at retirement (spec mode only)
+    _spec_accepted: int = field(default=0, repr=False)
+    _spec_rejected: int = field(default=0, repr=False)
 
 
 #: end-of-stream sentinel pushed onto every subscribed token queue at
@@ -415,6 +421,10 @@ class EngineMetrics:
     preemptions: int = 0         # active requests kicked back to the queue
     deadline_hits: int = 0       # first token on or before req.deadline
     deadline_misses: int = 0     # first token after req.deadline
+    spec_ticks: int = 0          # speculative draft->verify ticks run
+    spec_drafted: int = 0        # draft tokens proposed across spec ticks
+    spec_accepted: int = 0       # draft tokens the verifier accepted
+    spec_rejected: int = 0       # draft tokens the verifier rejected
 
     def since(self, start: "EngineMetrics") -> "EngineMetrics":
         """Per-call delta: these counters minus a ``start`` snapshot (the
@@ -449,6 +459,12 @@ class EngineMetrics:
             "preemptions": self.preemptions,
             "deadline_hits": self.deadline_hits,
             "deadline_misses": self.deadline_misses,
+            "spec_ticks": self.spec_ticks,
+            "spec_drafted": self.spec_drafted,
+            "spec_accepted": self.spec_accepted,
+            "spec_rejected": self.spec_rejected,
+            "spec_acceptance": (self.spec_accepted / self.spec_drafted
+                                if self.spec_drafted else 0.0),
         }
         return d
 
@@ -486,6 +502,14 @@ _ENGINE_COUNTERS = {
                       "first token on or before the request deadline"),
     "deadline_misses": ("engine_deadline_misses_total",
                         "first token after the request deadline"),
+    "spec_ticks": ("engine_spec_ticks_total",
+                   "speculative draft->verify ticks run"),
+    "spec_drafted": ("engine_spec_drafted_tokens_total",
+                     "draft tokens proposed across speculative ticks"),
+    "spec_accepted": ("engine_spec_accepted_tokens_total",
+                      "draft tokens the verifier accepted"),
+    "spec_rejected": ("engine_spec_rejected_tokens_total",
+                      "draft tokens the verifier rejected"),
 }
 
 
@@ -613,6 +637,25 @@ class Engine:
         self._chunk_step = jax.jit(self._chunk_step_impl)
         self._chunk_finish = jax.jit(self._chunk_finish_impl)
         self._seed_gather = jax.jit(self.backend.gather_staging)
+        # speculative decoding: the proposer drafts, _verify scores the
+        # whole (B, spec_k+1) window at the DECODE precision in one call,
+        # _spec_commit re-runs a partial-accept window on recurrent
+        # substrates, _draft is the self-speculation step over the pruned
+        # nf4p LUT tree (see repro.serve.spec)
+        self._spec = None
+        if config.spec is not None:
+            from repro.core.quant import (SPEC_DRAFT_QUANT,
+                                          quantize_draft_params)
+            from repro.serve.spec import make_proposer
+            if config.spec == "self_lut":
+                self.draft_params = (
+                    self.decode_params
+                    if config.quant == SPEC_DRAFT_QUANT
+                    else quantize_draft_params(params))
+                self._draft = jax.jit(self._draft_impl)
+            self._spec = make_proposer(config.spec, self)
+            self._verify = jax.jit(self._verify_impl)
+            self._spec_commit = jax.jit(self._spec_commit_impl)
 
     # --- observability ---------------------------------------------------
     def _obs_init(self, family: str, config: EngineConfig):
@@ -632,6 +675,14 @@ class Engine:
             "engine_tick_phase_seconds",
             "wall seconds per engine phase per tick",
             ("phase",), buckets=PHASE_BUCKETS)
+        self._h_spec_window = reg.histogram(
+            "engine_spec_accepted_per_window",
+            "accepted draft tokens per speculative verify window",
+            ("proposer",), buckets=SPEC_WINDOW_BUCKETS)
+        self._h_spec_request = reg.histogram(
+            "engine_spec_tokens_per_request",
+            "accepted/rejected draft tokens per retired request",
+            ("kind",), buckets=SPEC_REQUEST_BUCKETS)
         self._c_submitted = reg.counter(
             "engine_requests_submitted_total",
             "requests submitted (first submission only)", ("priority",))
@@ -654,9 +705,10 @@ class Engine:
         reg.gauge(
             "engine_info",
             "static engine identity (value is always 1)",
-            ("family", "quant", "paged"),
+            ("family", "quant", "paged", "spec"),
         ).set(1, family=family, quant=config.quant or "bf16",
-              paged=str(bool(config.paged)).lower())
+              paged=str(bool(config.paged)).lower(),
+              spec=config.spec or "off")
         self._update_gauges()
 
     def _update_gauges(self):
@@ -717,6 +769,39 @@ class Engine:
         toks = sample(logits[:, 0], key, self.sampling, rids=rids,
                       steps=steps)
         return toks, new_caches
+
+    def _verify_impl(self, params, tokens, caches, positions, tables,
+                     n_valid, last_pos):
+        """Speculative verify: score the whole (B, W) window in ONE call.
+        ``argmax(logits[:, i])`` is the greedy token after column ``i`` —
+        bitwise the same reduction the non-speculative tick applies to its
+        1-wide logits (spec mode is greedy-only by config), which is what
+        pins spec output token-identical to plain decode."""
+        logits, new_caches = self.model.decode_window(
+            params, tokens, caches, positions, tables=tables,
+            n_valid=n_valid, last_pos=last_pos)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_caches
+
+    def _spec_commit_impl(self, params, tokens, caches, positions, tables,
+                          n_valid, last_pos):
+        """Partial-accept commit on recurrent substrates: re-run the SAME
+        window from the PRE-verify cache tree with the SSD scan masked at
+        the accept boundary (``last_pos`` = accepted count, -1 for
+        inactive rows) so the carried state ingests exactly the accepted
+        tokens and nothing after them.  Logits are discarded — the
+        verifier already fixed the emitted tokens."""
+        _, new_caches = self.model.decode_window(
+            params, tokens, caches, positions, tables=tables,
+            n_valid=n_valid, last_pos=last_pos)
+        return new_caches
+
+    def _draft_impl(self, params, tokens, caches, positions, tables):
+        """One greedy self-speculation step over the pruned-LUT draft
+        weights against a throwaway functional cache copy."""
+        logits, new_caches = self.model.decode_step(
+            params, tokens, caches, positions, tables=tables)
+        return (jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32),
+                new_caches)
 
     def _chunk_step_impl(self, params, tokens, staging, offset):
         """One mid-prompt chunk: continue the staged (1, stage_len) cache
@@ -819,6 +904,11 @@ class Engine:
             self.tracer.event("finish", rid=req.rid, tokens=len(req.out),
                               cancelled=req.cancelled)
             self._c_finished.add()
+            if self._spec is not None:
+                self._h_spec_request.observe(float(req._spec_accepted),
+                                             kind="accepted")
+                self._h_spec_request.observe(float(req._spec_rejected),
+                                             kind="rejected")
         req.done = True
         self._callbacks.pop(req, None)
         for q in self._streams.pop(req, ()):
@@ -1370,6 +1460,15 @@ class Engine:
         if not self.active:
             self._update_gauges()
             return
+        if self._spec is None or not self._spec_tick():
+            self._decode_tick()
+        self._update_gauges()
+
+    def _decode_tick(self):
+        """The plain one-token decode advance: every active slot steps one
+        token at its own position.  Also the speculative mode's fallback
+        for ticks where no slot produced a draft — spec mode degrades to
+        exactly this path, never stalls."""
         toks = np.zeros((self.max_batch, 1), np.int32)
         rids = np.full(self.max_batch, -1, np.int32)
         steps = np.zeros(self.max_batch, np.int32)
@@ -1413,7 +1512,133 @@ class Engine:
         dte = self.clock() - t2
         self._h_phase.observe(dte, phase="emit")
         self.tracer.event("emit", ts=t2, dur=dte)
-        self._update_gauges()
+
+    def _spec_tick(self) -> bool:
+        """One speculative advance: draft -> batched verify -> accept
+        prefix -> rollback (see :mod:`repro.serve.spec` for the contract).
+        False when no slot produced a draft — the caller then runs the
+        plain :meth:`_decode_tick`, so speculation can only add tokens per
+        tick, never lose them.
+
+        Per-row draft budget: ``k_eff`` caps the window so the emitted
+        ``accepted + 1`` tokens can never overrun ``max_new`` or write
+        past ``max_seq - 1`` (the same retire boundary the plain tick
+        enforces), hence retire checks below stay identical to
+        :meth:`_decode_tick`'s.
+
+        Cache discipline: verify runs one ``decode_window`` call against
+        the live tree.  Rejected-position writes are dead weight on
+        attention substrates (``CacheBackend.rollback`` is bookkeeping
+        only; later writes land over them), but a recurrent state has
+        already INGESTED the rejected tokens — so on a partial accept the
+        window is re-run from the saved pre-verify tree with the SSD scan
+        masked at each row's accept boundary (full acceptance skips the
+        second pass: the verify-pass state is exactly the committed
+        state)."""
+        spec_k = self.config.spec_k
+        reqs: list[Request | None] = [None] * self.max_batch
+        k_eff = np.zeros(self.max_batch, np.int64)
+        for s, req in enumerate(self.slots):
+            if req is not None and req.rid in self.active:
+                reqs[s] = req
+                limit = min(len(req.prompt) + req.max_new, self.max_seq)
+                k_eff[s] = max(0, min(
+                    spec_k,
+                    req.max_new - len(req.out) - 1,
+                    limit - 2 - int(self.positions[s])))
+        t0 = self.clock()
+        drafts = self._spec.propose(reqs, k_eff.tolist())
+        total = sum(len(d) for d in drafts)
+        dt0 = self.clock() - t0
+        self._h_phase.observe(dt0, phase="draft")
+        self.tracer.event("draft", ts=t0, dur=dt0, drafted=total)
+        if total == 0:
+            return False
+        self.metrics.spec_drafted += total
+        toks = np.zeros((self.max_batch, spec_k + 1), np.int32)
+        n_valid = np.zeros(self.max_batch, np.int32)
+        n_active = 0
+        for s, req in enumerate(reqs):
+            if req is None:
+                continue
+            d = drafts[s]
+            toks[s, 0] = req.out[-1]
+            toks[s, 1:1 + len(d)] = d
+            n_valid[s] = 1 + len(d)
+            n_active += 1
+        tables = self.backend.decode_tables([cp.slot for cp in
+                                             self._chunked])
+        pre = self.caches
+        t1 = self.clock()
+        tgt, post = self._verify(
+            self.decode_params, jnp.asarray(toks), pre,
+            jnp.asarray(self.positions), tables, jnp.asarray(n_valid),
+            jnp.asarray(n_valid - 1))
+        tgt = np.asarray(tgt)
+        dt1 = self.clock() - t1
+        self.metrics.decode_s += dt1
+        self.metrics.ticks += 1
+        self.metrics.spec_ticks += 1
+        self.metrics.occupancy_sum += n_active
+        self._h_phase.observe(dt1, phase="verify")
+        self.tracer.event("verify", ts=t1, dur=dt1, batch=n_active)
+        accepts = np.zeros(self.max_batch, np.int32)
+        partial = False
+        for s, req in enumerate(reqs):
+            if req is not None:
+                accepts[s] = accept_length(drafts[s], tgt[s])
+                partial = partial or accepts[s] < len(drafts[s])
+        if self.backend.needs_state and partial:
+            commit_last = np.where(n_valid > 0, accepts, -1)
+            t2 = self.clock()
+            self.caches = self._spec_commit(
+                self.decode_params, jnp.asarray(toks), pre,
+                jnp.asarray(self.positions), tables,
+                jnp.asarray(n_valid),
+                jnp.asarray(commit_last.astype(np.int32)))
+            jax.block_until_ready(self.caches)
+            dt2 = self.clock() - t2
+            self.metrics.decode_s += dt2
+            self._h_phase.observe(dt2, phase="verify")
+            self.tracer.event("verify", ts=t2, dur=dt2, batch=n_active,
+                              commit=True)
+        else:
+            self.caches = post
+        t3 = self.clock()
+        emitted_total = 0
+        for s, req in enumerate(reqs):
+            if req is None or req.done or self.slots[s] is not req or \
+                    req.rid not in self.active:
+                continue   # a callback on an earlier row tore this one down
+            m = int(accepts[s])
+            rejected = len(drafts[s]) - m
+            req._spec_accepted += m
+            req._spec_rejected += rejected
+            self.metrics.spec_accepted += m
+            self.metrics.spec_rejected += rejected
+            self._h_spec_window.observe(float(m), proposer=self._spec.name)
+            for i in range(m + 1):
+                self._emit(req, int(tgt[s, i]))
+                emitted_total += 1
+                if req.done or self.slots[s] is not req:
+                    # an on_token callback cancelled/preempted this row
+                    # mid-window: the teardown already released the slot —
+                    # stop emitting and leave its bookkeeping alone
+                    break
+            else:
+                self.positions[s] += m + 1
+                if rejected:
+                    self.backend.rollback(s, rejected)
+                if len(req.out) >= req.max_new or \
+                        self.positions[s] >= self.max_seq - 1:
+                    self._retire(req)
+                    self.active.pop(req.rid, None)
+                    self._free_slot(s)
+        self.metrics.decode_tokens += emitted_total
+        dt3 = self.clock() - t3
+        self._h_phase.observe(dt3, phase="emit")
+        self.tracer.event("emit", ts=t3, dur=dt3)
+        return True
 
     def serve(self, requests: list[Request], max_ticks: int = 512) -> dict:
         """Queue ``requests`` on the scheduler and run to completion (or

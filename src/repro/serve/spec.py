@@ -1,0 +1,164 @@
+"""Speculative decoding: draft proposers + the accept/rollback contract.
+
+The engine's speculative tick is draft -> batched-verify -> accept-prefix
+-> rollback:
+
+  * **draft** — a :class:`DraftProposer` guesses up to ``spec_k`` next
+    tokens per active slot (host-side n-gram lookup, or the model itself
+    over pruned-LUT ``nf4p`` weights);
+  * **verify** — the FULL-precision model scores the whole window
+    ``[last_emitted, d_1 .. d_k]`` in one batched ``decode_window`` call;
+    ``argmax(logits[:, i])`` is the greedy token after window column
+    ``i``, exactly what non-speculative decode would have produced;
+  * **accept-prefix** — drafts are accepted left-to-right while they
+    match the verifier's argmax (:func:`accept_length`); the first
+    mismatch position still yields one emitted token — the verifier's own
+    correction — so every tick emits ``accepted + 1`` tokens and the
+    output stream is token-identical to non-speculative greedy;
+  * **rollback** — rejected positions are undone per substrate: attention
+    KV beyond the rewound pointer is dead weight the next writes
+    overwrite (``CacheBackend.rollback`` is pure bookkeeping); recurrent
+    state cannot rewind, so the engine re-commits it from the pre-verify
+    cache tree with the SSD scan masked at the accept boundary (see
+    ``Engine._spec_tick``); hybrid composes both.
+
+Proposers return plain host-side token lists; correctness never depends
+on draft quality — a bad draft only costs the wasted verify columns.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def accept_length(drafts, targets) -> int:
+    """Length of the accepted draft prefix.
+
+    ``targets[i]`` is the verifier's greedy token after window column
+    ``i`` — i.e. the token that SHOULD follow ``drafts[:i]``.  Draft ``i``
+    is accepted iff it equals ``targets[i]``; the scan stops at the first
+    mismatch (later agreements are conditioned on a wrong prefix and
+    worthless).
+    """
+    m = 0
+    for i, d in enumerate(drafts):
+        if int(d) != int(targets[i]):
+            break
+        m += 1
+    return m
+
+
+class DraftProposer:
+    """Protocol: guess the next tokens of every active slot.
+
+    ``propose(reqs, k_eff)`` takes the per-slot request list (``None`` for
+    empty/staged slots) and per-slot draft budgets, and returns per-slot
+    token lists with ``len(drafts[s]) <= k_eff[s]``.  Proposals are pure
+    suggestions — the engine verifies every one at full precision, so a
+    proposer can be arbitrarily wrong without affecting output tokens.
+    """
+
+    name = "base"
+
+    def propose(self, reqs, k_eff) -> list[list[int]]:
+        raise NotImplementedError
+
+
+class NGramProposer(DraftProposer):
+    """Prompt-lookup decoding: draft from the request's own history.
+
+    The longest n-gram suffix (``max_ngram`` down to ``min_ngram``) of
+    ``prompt + out`` is matched against the most recent earlier occurrence
+    in the same text; the tokens that followed it are proposed.  No extra
+    weights, no device work — pure host-side list scanning, so it rides
+    along with any quant mode and any family.
+    """
+
+    name = "ngram"
+
+    def __init__(self, max_ngram: int = 3, min_ngram: int = 1):
+        assert 1 <= min_ngram <= max_ngram, (min_ngram, max_ngram)
+        self.max_ngram = max_ngram
+        self.min_ngram = min_ngram
+
+    def propose(self, reqs, k_eff):
+        out = []
+        for req, k in zip(reqs, k_eff):
+            if req is None or k <= 0:
+                out.append([])
+                continue
+            ctx = list(req.prompt) + list(req.out)
+            out.append(_prompt_lookup(ctx, int(k), self.max_ngram,
+                                      self.min_ngram))
+        return out
+
+
+def _prompt_lookup(ctx: list[int], k: int, max_n: int, min_n: int
+                   ) -> list[int]:
+    """Continuation of the most recent earlier match of the longest
+    context-suffix n-gram; [] when nothing matches."""
+    n_ctx = len(ctx)
+    for n in range(min(max_n, n_ctx - 1), min_n - 1, -1):
+        suffix = ctx[-n:]
+        for j in range(n_ctx - n - 1, -1, -1):
+            if ctx[j:j + n] == suffix:
+                cont = ctx[j + n:j + n + k]
+                if cont:
+                    return [int(t) for t in cont]
+                break        # the match is flush with the suffix: shorter n
+    return []
+
+
+class SelfLutProposer(DraftProposer):
+    """Self-speculation over the pruned-LUT draft tree.
+
+    ``spec_k`` sequential greedy steps of the engine's jitted draft step
+    (``decode_step`` over ``nf4p``-quantized weights) run against a LOCAL
+    functional copy of the live caches — the copy is discarded, so draft
+    writes land harmlessly anywhere (staged rows stay parked on the
+    garbage block; prefix-cache COW blocks are never written because
+    draft steps use the same ``decode_tables`` view decode uses).  All
+    ``max_batch`` rows step together; rows past their own ``k_eff`` just
+    produce ignored tokens.
+    """
+
+    name = "self_lut"
+
+    def __init__(self, engine):
+        self.engine = engine
+
+    def propose(self, reqs, k_eff):
+        eng = self.engine
+        kmax = max((int(k) for r, k in zip(reqs, k_eff) if r is not None),
+                   default=0)
+        drafts: list[list[int]] = [[] for _ in reqs]
+        if kmax <= 0:
+            return drafts
+        toks = np.zeros((eng.max_batch, 1), np.int32)
+        for s, req in enumerate(reqs):
+            if req is not None:
+                toks[s, 0] = req.out[-1]
+        positions = np.asarray(eng.positions, np.int64).copy()
+        caches = eng.caches                       # functional copy-on-write
+        tables = eng.backend.decode_tables([cp.slot for cp in eng._chunked])
+        for _ in range(kmax):
+            pos = np.minimum(positions, eng.max_seq - 1).astype(np.int32)
+            nxt, caches = eng._draft(eng.draft_params, jnp.asarray(toks),
+                                     caches, jnp.asarray(pos), tables)
+            nxt = np.asarray(nxt)
+            for s, req in enumerate(reqs):
+                if req is not None and len(drafts[s]) < int(k_eff[s]):
+                    drafts[s].append(int(nxt[s]))
+            toks[:, 0] = nxt
+            positions += 1
+        return drafts
+
+
+def make_proposer(mode: str, engine) -> DraftProposer:
+    """EngineConfig(spec=...) -> proposer instance bound to the engine."""
+    if mode == "ngram":
+        return NGramProposer()
+    if mode == "self_lut":
+        return SelfLutProposer(engine)
+    raise ValueError(f"unknown spec mode {mode!r} "
+                     "(expected 'ngram' or 'self_lut')")
